@@ -1,0 +1,74 @@
+"""Ablations over the distribution policy, run as dry-run sweeps (each point
+is a fresh 512-device subprocess compile; roofline terms from the JSON).
+
+1. kv cache layout (heads vs seq) on GQA decode — validates the
+   flash-decode-sharding default (EXPERIMENTS.md Pair A).
+2. MoE capacity factor on qwen2-moe prefill — dropped-token compute vs
+   buffer traffic trade-off.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+OUT = "experiments/ablations"
+
+
+def _run(arch, shape, policy, tag):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT, "--tag", tag]
+    if policy:
+        cmd += ["--policy-json", json.dumps(policy)]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=900)
+    mesh = "pod"
+    path = os.path.join(OUT, f"{arch}--{shape}--{mesh}-{tag}.json")
+    if not os.path.exists(path):
+        raise RuntimeError(f"{arch}/{shape}/{tag} failed:\n{r.stdout[-800:]}"
+                           f"\n{r.stderr[-800:]}")
+    return json.load(open(path))
+
+
+def run():
+    rows = []
+    # 1. kv layout on GQA decode
+    for arch in ("yi-34b", "qwen2.5-3b"):
+        for layout in ("heads", "seq"):
+            rec = _run(arch, "decode_32k", {"kv_layout": layout}, f"kv_{layout}")
+            rows.append({
+                "name": f"kvlayout/{arch}/{layout}",
+                "value": round(max(rec["t_compute"], rec["t_memory"],
+                                   rec["t_collective"]) * 1e3, 2),
+                "t_memory_ms": round(rec["t_memory"] * 1e3, 2),
+                "t_collective_ms": round(rec["t_collective"] * 1e3, 2),
+            })
+            print(f"# {rows[-1]['name']:32s} dominant {rows[-1]['value']:9.2f} ms")
+    # 2. MoE capacity factor
+    for cf in (1.0, 1.25, 2.0):
+        rec = _run("qwen2-moe-a2.7b", "prefill_32k", {"moe_cf": cf},
+                   f"cf{cf}")
+        rows.append({
+            "name": f"capacity_factor/qwen2-moe/{cf}",
+            "value": round(max(rec["t_compute"], rec["t_memory"],
+                               rec["t_collective"]) * 1e3, 2),
+            "t_memory_ms": round(rec["t_memory"] * 1e3, 2),
+            "mem_gib": round(rec["per_device_bytes"] / 2 ** 30, 2),
+        })
+        print(f"# {rows[-1]['name']:32s} dominant {rows[-1]['value']:9.2f} ms "
+              f"mem {rows[-1]['mem_gib']} GiB")
+    emit(rows, "ablations")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+from typing import Dict, List
+
+
+def emit(rows: List[Dict], name: str, out_dir: str = "experiments/results"):
+    """Print ``name,us_per_call,derived`` CSV rows and save the full table."""
+    if not rows:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    keys = list(dict.fromkeys(k for r in rows for k in r))   # union, ordered
+    with open(os.path.join(out_dir, f"{name}.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    for r in rows:
+        main = r.get("us_per_call", r.get("downtime_ms", r.get("value", "")))
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{main},{derived}")

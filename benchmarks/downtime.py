@@ -1,0 +1,77 @@
+"""Paper Figs. 11-13: edge service downtime per strategy when the network
+speed changes 20 <-> 5 Mbps.
+
+The paper varies CPU/memory availability on the edge and finds downtime
+insensitive to it; this container has no cgroup analogue, so we vary the
+MODEL SIZE (the quantity that actually sets rebuild cost) and both
+bandwidth directions, and verify per-strategy magnitudes + ordering.
+
+Each (strategy, direction) is measured over a full 20->5->20 cycle so the
+warm-cache benefit of Scenario B Case 2 ("same container") is visible from
+the second switch onward, exactly like a long-running deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.network import NetworkModel
+from repro.core.stages import StageRunner
+from repro.core.switching import PipelineManager
+from repro.models import transformer as T
+
+STRATEGIES = ("pause_resume", "switch_a", "switch_b1", "switch_b2")
+
+
+def _make_mgr(cfg, params, split, standby_split):
+    runner = StageRunner(cfg, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                              cfg.vocab_size)
+    return PipelineManager(runner, split=split, net=NetworkModel(20.0),
+                           sample_inputs={"tokens": toks},
+                           standby_split=standby_split), {"tokens": toks}
+
+
+def run(arch="qwen2.5-3b", num_layers=None, cycles=2):
+    cfg = get_config(arch).reduced()
+    if num_layers:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    split_fast, split_slow = 1, max(1, cfg.num_layers)  # 20 vs 5 Mbps optima
+    rows = []
+    for strat in STRATEGIES:
+        mgr, inputs = _make_mgr(cfg, params, split_fast, split_slow)
+        downs = []
+        for cyc in range(cycles):
+            for bw, split in ((5.0, split_slow), (20.0, split_fast)):
+                mgr.set_network(NetworkModel(bw))
+                rep = mgr.repartition(strat, split)
+                downs.append(rep.downtime)
+                rows.append({
+                    "name": f"{arch}-L{cfg.num_layers}/{strat}/cyc{cyc}"
+                            f"/to{int(bw)}mbps",
+                    "downtime_ms": round(rep.downtime * 1e3, 3),
+                    "t_build_ms": round(rep.t_build * 1e3, 3),
+                    "t_switch_ms": round(rep.t_switch * 1e3, 3),
+                    "full_outage": int(rep.full_outage),
+                })
+                out, _ = mgr.serve(inputs)   # service must be alive
+        print(f"# {arch} L{cfg.num_layers} {strat:13s}: "
+              f"first {downs[0]*1e3:8.1f} ms, steady "
+              f"{np.mean(downs[2:])*1e3:8.1f} ms")
+    emit(rows, f"fig11_13_downtime_{arch}")
+    return rows
+
+
+def main():
+    run("qwen2.5-3b")
+    run("qwen2.5-3b", num_layers=4)   # bigger rebuild => baseline grows
+    run("falcon-mamba-7b")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Figs. 14-15: frame drop rate during t_downtime for different
+incoming FPS, per strategy, at 20 and 5 Mbps.
+
+Windows come from MEASURED SwitchReports (benchmarks/downtime.py machinery);
+the frame stream is replayed through the discrete-event simulator with the
+old pipeline's measured service time.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.downtime import _make_mgr
+from repro.configs import get_config
+from repro.core.downtime import simulate_window
+from repro.core.network import NetworkModel
+from repro.models import transformer as T
+
+FPS_LIST = (1, 5, 10, 15, 30)
+
+
+def run(arch="qwen2.5-3b"):
+    cfg = get_config(arch).reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    rows = []
+    for bw in (20.0, 5.0):
+        for strat in ("pause_resume", "switch_a", "switch_b1", "switch_b2"):
+            mgr, inputs = _make_mgr(cfg, params, 1, 2)
+            mgr.set_network(NetworkModel(bw))
+            _, timing = mgr.serve(inputs)      # old-pipeline service time
+            rep = mgr.repartition(strat, 2 if strat != "switch_a" else 2)
+            for fps in FPS_LIST:
+                sim = simulate_window(fps=fps, window=rep.downtime,
+                                      service_time=timing.t_edge,
+                                      full_outage=rep.full_outage,
+                                      horizon=max(rep.downtime, 1.0))
+                rows.append({
+                    "name": f"{arch}/{strat}@{int(bw)}mbps/fps{fps}",
+                    "value": round(sim.drop_rate, 4),
+                    "window_ms": round(rep.downtime * 1e3, 2),
+                    "arrived": sim.arrived,
+                    "dropped": sim.dropped,
+                })
+            last = [r for r in rows[-len(FPS_LIST):]]
+            print(f"# {strat:13s}@{int(bw):2d}mbps window "
+                  f"{rep.downtime*1e3:8.1f}ms drop rates "
+                  + " ".join(f"{r['value']:.2f}" for r in last))
+    emit(rows, f"fig14_15_framedrop_{arch}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

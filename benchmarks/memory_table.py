@@ -1,0 +1,75 @@
+"""Paper Table I: memory required per approach (initial / additional /
+total), measured from live parameter buffers.
+
+Expected pattern (validated): baseline 1x; Dynamic Switching A Case 1 = 2x
+(standby owns weights); A Case 2 / B Case 2 = 1x (standby/new pipeline
+shares the donor weights); B Case 1 = 2x transiently during switching.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.network import NetworkModel
+from repro.core.stages import StageRunner
+from repro.core.switching import PipelineManager
+from repro.models import transformer as T
+
+
+def run(arch="qwen2.5-3b"):
+    cfg = get_config(arch).reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                              cfg.vocab_size)
+    inputs = {"tokens": toks}
+    rows = []
+
+    def report(name, mgr, transient=0):
+        m = mgr.memory_report()
+        rows.append({
+            "name": f"{arch}/{name}",
+            "value": round(m["total_bytes"] / 2 ** 20, 2),
+            "initial_mb": round(m["initial_bytes"] / 2 ** 20, 2),
+            "additional_mb": round(m["additional_bytes"] / 2 ** 20, 2),
+            "transient_mb": round(transient / 2 ** 20, 2),
+        })
+
+    runner = StageRunner(cfg, params)
+    base = PipelineManager(runner, 1, NetworkModel(20.0), inputs)
+    report("baseline_pause_resume", base)
+
+    a1 = PipelineManager(runner, 1, NetworkModel(20.0), inputs,
+                         standby_split=2, standby_owns_weights=True)
+    report("dynswitch_A_case1", a1)
+
+    a2 = PipelineManager(runner, 1, NetworkModel(20.0), inputs,
+                         standby_split=2, standby_owns_weights=False)
+    report("dynswitch_A_case2", a2)
+
+    b1 = PipelineManager(runner, 1, NetworkModel(20.0), inputs)
+    rep = b1.repartition("switch_b1", 2)
+    # B case 1: the new container owns weights WHILE the old pipeline still
+    # exists -> transient 2x, steady 1x after the old container is reaped.
+    transient = 2 * b1.active.live_param_bytes()
+    report("dynswitch_B_case1", b1, transient=transient)
+
+    b2 = PipelineManager(runner, 1, NetworkModel(20.0), inputs)
+    b2.repartition("switch_b2", 2)
+    report("dynswitch_B_case2", b2)
+
+    base_mb = rows[0]["value"]
+    for r in rows:
+        r["x_baseline"] = round(max(r["value"], r["transient_mb"]) / base_mb, 2)
+        print(f"# {r['name']:40s} total {r['value']:9.1f} MB "
+              f"(+{r['additional_mb']:8.1f}) = {r['x_baseline']:.2f}x baseline")
+    emit(rows, f"table1_memory_{arch}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figs. 2-3: end-to-end latency (T_e/T_t/T_c stacked) per partition
+point at 20 vs 5 Mbps, for VGG-19 (sequential) and MobileNetV2 (blocks).
+
+The paper's observation to reproduce: the optimal split MOVES when the
+bandwidth changes (VGG-19: layer 17 -> 22 in the paper's numbering).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.network import NetworkModel
+from repro.core.partitioner import latency_curve, optimal_split
+from repro.core.profiler import profile_cnn, profile_transformer
+from repro.models import cnn as cnn_mod
+
+
+def run(arch: str = "vgg19", bandwidths=(20.0, 5.0)):
+    cfg = get_config(arch)
+    rows = []
+    if getattr(cfg, "family", "") == "cnn":
+        params, units, shapes = cnn_mod.build_cnn(cfg, jax.random.PRNGKey(0))
+        profile = profile_cnn(cfg, params, units, shapes, reps=2)
+    else:
+        profile = profile_transformer(cfg, seq=1024)
+    opt = {}
+    for bw in bandwidths:
+        net = NetworkModel(bw)
+        best = optimal_split(profile, net)
+        opt[bw] = best.split
+        for c in latency_curve(profile, net):
+            rows.append({
+                "name": f"{arch}@{bw}mbps/split{c.split}",
+                "us_per_call": round(c.total * 1e6, 1),
+                "t_edge_ms": round(c.t_edge * 1e3, 3),
+                "t_transfer_ms": round(c.t_transfer * 1e3, 3),
+                "t_cloud_ms": round(c.t_cloud * 1e3, 3),
+                "boundary_kb": profile.units[c.split].boundary_bytes // 1024,
+                "optimal": int(c.split == best.split),
+            })
+    emit(rows, f"fig2_3_partition_profile_{arch}")
+    print(f"# {arch}: optimal split moved "
+          f"{opt[bandwidths[0]]} -> {opt[bandwidths[1]]} when bandwidth "
+          f"{bandwidths[0]} -> {bandwidths[1]} Mbps "
+          f"({'MOVED' if opt[bandwidths[0]] != opt[bandwidths[1]] else 'unchanged'})")
+    return rows, opt
+
+
+def main():
+    for arch in ("vgg19", "mobilenetv2", "qwen2.5-3b"):
+        run(arch)
+
+
+if __name__ == "__main__":
+    main()

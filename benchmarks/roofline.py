@@ -1,0 +1,52 @@
+"""Roofline table (deliverable g): reads the dry-run JSON records and prints
+the three terms per (arch x shape x mesh) with the dominant bottleneck.
+
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(dryrun_dir="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(path))
+        if r.get("tag"):
+            continue       # hillclimb variants reported in EXPERIMENTS.md
+        dom = r["bottleneck"]
+        rows.append({
+            "name": f"{r['arch']}/{r['shape']}/{r['mesh']}",
+            "value": round(max(r["t_compute"], r["t_memory"],
+                               r["t_collective"]) * 1e3, 3),
+            "t_compute_ms": round(r["t_compute"] * 1e3, 3),
+            "t_memory_ms": round(r["t_memory"] * 1e3, 3),
+            "t_collective_ms": round(r["t_collective"] * 1e3, 3),
+            "bottleneck": dom,
+            "useful_flops_frac": round(r["useful_flops_frac"], 3),
+            "mem_per_dev_gib": round((r["per_device_bytes"] or 0) / 2 ** 30, 2),
+            "compile_s": round(r.get("compile_s", 0), 1),
+        })
+    if not rows:
+        print("# no dry-run records found — run repro.launch.dryrun first")
+        return rows
+    emit(rows, "roofline_table")
+    by_b = {}
+    for r in rows:
+        by_b.setdefault(r["bottleneck"], []).append(r["name"])
+    for b, names in sorted(by_b.items()):
+        print(f"# bottleneck={b}: {len(names)} pairs")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

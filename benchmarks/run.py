@@ -1,0 +1,52 @@
+"""Benchmark suite entry point: one benchmark per paper table/figure,
+plus the roofline table (deliverable d + g).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,downtime,...]
+
+Prints ``name,us_per_call,derived`` CSV lines (also saved under
+experiments/results/).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (ablations, downtime, framedrop, memory_table,
+                        partition_profile, roofline)
+
+SUITES = {
+    "fig2_3_partition_profile": partition_profile.main,
+    "fig11_13_downtime": downtime.main,
+    "fig14_15_framedrop": framedrop.main,
+    "table1_memory": memory_table.main,
+    "roofline": roofline.main,
+    "ablations": ablations.main,     # dry-run policy sweeps (compile-heavy)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    filters = [f for f in args.only.split(",") if f]
+    failures = []
+    for name, fn in SUITES.items():
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"\n### {name}")
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} benchmark failures: {failures}",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("\n# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

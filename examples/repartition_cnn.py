@@ -1,0 +1,32 @@
+"""The paper's own experiment (Figs. 2-3): profile VGG-19 / MobileNetV2
+layer-by-layer and show the optimal split moving as bandwidth changes.
+
+    PYTHONPATH=src python examples/repartition_cnn.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import NetworkModel, latency_curve, optimal_split, profile_cnn
+from repro.models import cnn
+
+
+def main():
+    for arch in ("vgg19", "mobilenetv2"):
+        cfg = get_config(arch)
+        params, units, shapes = cnn.build_cnn(cfg, jax.random.PRNGKey(0))
+        profile = profile_cnn(cfg, params, units, shapes, reps=2)
+        print(f"\n{arch}: {len(units)} partition units")
+        for bw in (20.0, 5.0):
+            best = optimal_split(profile, NetworkModel(bw))
+            u = profile.units[best.split]
+            print(f"  @{bw:4.0f} Mbps optimal split after {u.name:10s} "
+                  f"(boundary {u.boundary_bytes//1024:6d} KB, total "
+                  f"{best.total*1e3:7.1f} ms)")
+        f, s = (optimal_split(profile, NetworkModel(b)) for b in (20.0, 5.0))
+        verdict = "MOVED" if f.split != s.split else "did not move"
+        print(f"  -> optimal split {verdict} when bandwidth dropped "
+              f"(paper Fig. {'2' if arch == 'vgg19' else '3'})")
+
+
+if __name__ == "__main__":
+    main()

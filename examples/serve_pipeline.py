@@ -1,0 +1,76 @@
+"""End-to-end serving driver (deliverable b): a camera streams frames at a
+fixed FPS into the edge-cloud pipeline of a CNN (the paper's own
+video-analytics workload, whose per-layer activation volumes VARY, so the
+optimal split really moves) while the bandwidth follows the paper's
+20 -> 5 -> 20 Mbps trace; the NeukonfigController repartitions live with
+each strategy and we compare downtime + dropped frames.
+
+    PYTHONPATH=src python examples/serve_pipeline.py [--fps 15]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (BandwidthTrace, NetworkModel, NeukonfigController,
+                        PipelineManager, optimal_split, profile_cnn,
+                        simulate_window)
+from repro.core.stages import CnnStageRunner
+
+
+def run_strategy(strategy, cfg, fps):
+    runner = CnnStageRunner(cfg)
+    profile = profile_cnn(cfg, runner.params, runner.units, runner.shapes,
+                          reps=1)
+    rng = np.random.default_rng(0)
+    sample = {"image": jax.numpy.asarray(
+        rng.standard_normal((1, cfg.input_hw, cfg.input_hw, cfg.input_ch),
+                            dtype=np.float32))}
+    trace = BandwidthTrace(steps=[(0.0, 20.0), (30.0, 5.0), (60.0, 20.0)])
+    split0 = optimal_split(profile, trace.at(0.0)).split
+    standby = optimal_split(profile, NetworkModel(5.0)).split \
+        if strategy == "switch_a" else None
+    mgr = PipelineManager(runner, split=split0, net=trace.at(0.0),
+                          sample_inputs=sample, standby_split=standby)
+    ctl = NeukonfigController(mgr, profile, trace, strategy=strategy)
+    events = ctl.run(90.0)
+    _, timing = mgr.serve(sample)
+    total_down = sum(e.report.downtime for e in events if e.report)
+    n_switch = len([e for e in events if e.report])
+    dropped = arrived = 0
+    for e in events:
+        if e.report:
+            sim = simulate_window(fps=fps, window=e.report.downtime,
+                                  service_time=timing.t_edge,
+                                  full_outage=e.report.full_outage,
+                                  horizon=max(e.report.downtime, 1e-3))
+            dropped += sim.dropped
+            arrived += sim.arrived
+    moves = " ".join(f"{e.report.old_split}->{e.report.new_split}"
+                     for e in events if e.report)
+    print(f"{strategy:13s}: {n_switch} switches ({moves}), "
+          f"total downtime {total_down*1e3:9.2f} ms, "
+          f"frames dropped in windows {dropped}/{max(arrived,1)}")
+    return total_down, n_switch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fps", type=float, default=15.0)
+    ap.add_argument("--arch", default="mobilenetv2")
+    ap.add_argument("--hw", type=int, default=96,
+                    help="input resolution (96 keeps it CPU-friendly)")
+    args = ap.parse_args()
+    cfg = dataclasses.replace(get_config(args.arch), input_hw=args.hw)
+    results = {s: run_strategy(s, cfg, args.fps)
+               for s in ("pause_resume", "switch_b1", "switch_b2", "switch_a")}
+    downs = {s: d for s, (d, n) in results.items()}
+    assert all(n >= 2 for _, n in results.values()), "expected live switches"
+    assert downs["switch_a"] <= downs["switch_b2"] <= downs["pause_resume"]
+    print("paper ordering reproduced: A << B2 < baseline ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Flat-key .npz pytree checkpointing.
+
+Used by training (periodic saves) and by the Pause-and-Resume baseline:
+when the paused application "resumes with new metadata" it reloads its model
+from storage — exactly the cost Dynamic Switching avoids by keeping donor
+weights in memory.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_pytree(tree, path: str) -> int:
+    """Returns bytes written."""
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+    return os.path.getsize(path)
+
+
+def load_pytree(path: str, like=None):
+    """Reload; if ``like`` given, unflatten into its structure + dtypes."""
+    data = np.load(path)
+    flat = {k: data[k] for k in data.files}
+    if like is None:
+        return flat
+    leaves, treedef = jax.tree.flatten(like)
+    keys = _flatten(like)
+    out_flat = {}
+    for k in keys:
+        out_flat[k] = jnp.asarray(flat[k])
+    # rebuild nested dict structure
+    def rebuild(sub, prefix=""):
+        if isinstance(sub, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in sub.items()}
+        if isinstance(sub, (list, tuple)):
+            t = type(sub)
+            return t(rebuild(v, f"{prefix}{i}/") for i, v in enumerate(sub))
+        return out_flat[prefix[:-1]]
+    return rebuild(like)

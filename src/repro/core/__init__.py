@@ -1,0 +1,16 @@
+# The paper's primary contribution: live DNN repartitioning with minimal
+# edge service downtime (NEUKONFIG, IC2E'21).
+from repro.core.controller import NeukonfigController, RepartitionEvent
+from repro.core.downtime import SimResult, simulate_window, sweep_fps
+from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, ICI_LINK_BW, TPU_V5E
+from repro.core.network import (BandwidthTrace, NetworkModel, NetworkMonitor,
+                                PAPER_TRACE)
+from repro.core.partitioner import (SplitDecision, latency_curve,
+                                    optimal_split, should_repartition)
+from repro.core.pipeline import EdgeCloudPipeline, RequestTiming
+from repro.core.profiler import (ModelProfile, UnitProfile, profile_cnn,
+                                 profile_transformer)
+from repro.core.stages import StageRunner
+from repro.core.state_handoff import (HandoffPlan, per_layer_state_bytes,
+                                      plan_handoff)
+from repro.core.switching import PipelineManager, SwitchReport

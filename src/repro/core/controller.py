@@ -1,0 +1,60 @@
+"""NeukonfigController: ties monitor -> partitioner -> strategy together.
+
+Drives a scripted bandwidth trace: on every detected change it recomputes
+the optimal split (Eq. 1) and, if the optimum moved, repartitions with the
+configured strategy.  Returns the full event log — this is the e2e driver
+used by examples/serve_pipeline.py and the downtime benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.network import BandwidthTrace, NetworkModel, NetworkMonitor
+from repro.core.partitioner import optimal_split, should_repartition
+from repro.core.profiler import ModelProfile
+from repro.core.switching import PipelineManager, SwitchReport
+
+
+@dataclass
+class RepartitionEvent:
+    t: float
+    bandwidth_mbps: float
+    old_split: int
+    new_split: int
+    report: Optional[SwitchReport]
+
+
+class NeukonfigController:
+    def __init__(self, mgr: PipelineManager, profile: ModelProfile,
+                 trace: BandwidthTrace, *, strategy: str = "switch_b2",
+                 min_gain: float = 0.0, poll_dt: float = 1.0):
+        self.mgr = mgr
+        self.profile = profile
+        self.monitor = NetworkMonitor(trace)
+        self.strategy = strategy
+        self.min_gain = min_gain
+        self.poll_dt = poll_dt
+        self.events: List[RepartitionEvent] = []
+
+    def step(self, t: float) -> Optional[RepartitionEvent]:
+        """Poll the network at virtual time t; repartition if needed."""
+        net = self.monitor.poll(t)
+        if net is None:
+            return None
+        self.mgr.set_network(net)
+        do, best = should_repartition(self.profile, self.mgr.active.split,
+                                      net, self.min_gain)
+        ev = RepartitionEvent(t, net.bandwidth_mbps, self.mgr.active.split,
+                              best.split, None)
+        if do:
+            ev.report = self.mgr.repartition(self.strategy, best.split)
+        self.events.append(ev)
+        return ev
+
+    def run(self, duration: float) -> List[RepartitionEvent]:
+        t = 0.0
+        while t <= duration:
+            self.step(t)
+            t += self.poll_dt
+        return self.events

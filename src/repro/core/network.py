@@ -1,0 +1,74 @@
+"""Network emulation between the edge and cloud stages.
+
+The paper shapes traffic with Linux ``tc`` (20 Mbps <-> 5 Mbps, 20 ms RTT,
+section IV-A).  Here the link is a model: a ``NetworkModel`` prices an
+activation transfer, a ``BandwidthTrace`` scripts speed changes over
+(virtual) time, and a ``NetworkMonitor`` detects changes — the paper's
+repartition trigger (section II-B: network variation is THE valid scenario;
+CPU/memory stress is not).
+
+In the multi-pod TPU mapping the same classes describe the inter-pod link
+(ICI/DCN); only the constants change (see hardware.py).
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class NetworkModel:
+    bandwidth_mbps: float
+    latency_ms: float = 20.0
+
+    def transfer_time(self, nbytes: int) -> float:
+        """Seconds to move nbytes edge->cloud (latency + serialisation)."""
+        return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_mbps * 1e6)
+
+
+@dataclass
+class BandwidthTrace:
+    """Scripted (time_s, mbps) steps; bandwidth holds until the next step."""
+    steps: Sequence[Tuple[float, float]]   # sorted by time
+    latency_ms: float = 20.0
+
+    def at(self, t: float) -> NetworkModel:
+        times = [s[0] for s in self.steps]
+        i = bisect.bisect_right(times, t) - 1
+        i = max(i, 0)
+        return NetworkModel(self.steps[i][1], self.latency_ms)
+
+    def change_points(self) -> List[float]:
+        return [t for t, _ in self.steps[1:]]
+
+
+PAPER_TRACE = BandwidthTrace(steps=[(0.0, 20.0), (30.0, 5.0), (60.0, 20.0)])
+
+
+@dataclass
+class NetworkMonitor:
+    """Detects bandwidth change beyond a relative threshold.
+
+    The paper repartitions on every observed change; ``hysteresis`` > 0 is a
+    beyond-paper extension (its section VI lists repartition-frequency control
+    as future work).
+    """
+    trace: BandwidthTrace
+    rel_threshold: float = 0.10
+    hysteresis_s: float = 0.0
+    _last_bw: Optional[float] = None
+    _last_change_t: float = -1e9
+
+    def poll(self, t: float) -> Optional[NetworkModel]:
+        """Returns the new NetworkModel if a significant change happened."""
+        net = self.trace.at(t)
+        if self._last_bw is None:
+            self._last_bw = net.bandwidth_mbps
+            return None
+        rel = abs(net.bandwidth_mbps - self._last_bw) / self._last_bw
+        if rel > self.rel_threshold and (t - self._last_change_t) >= self.hysteresis_s:
+            self._last_bw = net.bandwidth_mbps
+            self._last_change_t = t
+            return net
+        return None

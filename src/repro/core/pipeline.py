@@ -1,0 +1,130 @@
+"""EdgeCloudPipeline: two compiled stages joined by a priced network link.
+
+``process`` runs stage-edge (measured wall-clock), prices the boundary
+transfer with the current NetworkModel (virtual time — there is no real
+5 Mbps link in this container), and runs stage-cloud (measured wall-clock,
+scaled by the cloud/edge speed ratio so a 1-core host still reproduces the
+testbed's asymmetry).  Per-request breakdown mirrors Eq. 1.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC
+from repro.core.network import NetworkModel
+from repro.core.stages import StageRunner
+
+
+@dataclass
+class RequestTiming:
+    t_edge: float
+    t_transfer: float
+    t_cloud: float
+
+    @property
+    def total(self) -> float:
+        return self.t_edge + self.t_transfer + self.t_cloud
+
+
+@dataclass
+class BuildReport:
+    t_weights: float = 0.0        # weight placement / reload
+    t_compile_edge: float = 0.0
+    t_compile_cloud: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.t_weights + self.t_compile_edge + self.t_compile_cloud
+
+
+class EdgeCloudPipeline:
+    """One edge-cloud pipeline at a fixed split point."""
+
+    def __init__(self, runner: StageRunner, split: int, net: NetworkModel,
+                 *, edge_scale: float = CLOUD_SPEC.flops / EDGE_SPEC.flops,
+                 owns_weights: bool = False):
+        self.runner = runner
+        self.split = split
+        self.net = net
+        self.edge_scale = edge_scale     # edge is this much slower than host
+        self.owns_weights = owns_weights  # True => separate weight buffers (2x mem)
+        self.edge_fn: Optional[Callable] = None
+        self.cloud_fn: Optional[Callable] = None
+        self.params = runner.params
+
+    # -- build ----------------------------------------------------------
+    def build(self, sample_inputs, *, cold: bool, reload_from: Optional[str] = None
+              ) -> BuildReport:
+        """Compile both stages.
+
+        cold=True  -> fresh closures (retrace+recompile): "new container".
+        cold=False -> runner's cached jits: "same container" (hit if this
+                      split was compiled before; otherwise compile only).
+        reload_from -> reload weights from disk first (Pause-and-Resume:
+                      the resumed app re-reads its model file).
+        """
+        rep = BuildReport()
+        r = self.runner
+        if reload_from is not None:
+            from repro.checkpoint import load_pytree
+            t0 = time.perf_counter()
+            self.params = load_pytree(reload_from, like=r.params)
+            jax.block_until_ready(self.params)
+            rep.t_weights = time.perf_counter() - t0
+        elif self.owns_weights:
+            t0 = time.perf_counter()
+            self.params = jax.tree.map(
+                lambda a: jax.device_put(np.asarray(a)), r.params)
+            jax.block_until_ready(self.params)
+            rep.t_weights = time.perf_counter() - t0
+        else:
+            self.params = r.params
+
+        lo_e, hi_e = 0, self.split + 1
+        lo_c, hi_c = self.split + 1, r.num_units
+        make = r.fresh_stage_fn if cold else r.stage_fn
+        t0 = time.perf_counter()
+        self.edge_fn = make(lo_e, hi_e)
+        out = self.edge_fn(self.params, sample_inputs)
+        jax.block_until_ready(out)
+        rep.t_compile_edge = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        self.cloud_fn = make(lo_c, hi_c)
+        out2 = self.cloud_fn(self.params, out)
+        jax.block_until_ready(out2)
+        rep.t_compile_cloud = time.perf_counter() - t0
+        return rep
+
+    @property
+    def ready(self) -> bool:
+        return self.edge_fn is not None
+
+    # -- serve ------------------------------------------------------------
+    def process(self, inputs, *, batch: int = 1, seq: Optional[int] = None
+                ) -> tuple[Any, RequestTiming]:
+        assert self.ready, "pipeline not built"
+        t0 = time.perf_counter()
+        h = self.edge_fn(self.params, inputs)
+        jax.block_until_ready(h)
+        t_edge = (time.perf_counter() - t0) * self.edge_scale
+        if seq is None:
+            seq = inputs["tokens"].shape[1] if "tokens" in inputs else 1
+        bbytes = self.runner.boundary_bytes(self.split, batch, seq)
+        t_transfer = self.net.transfer_time(bbytes)
+        t0 = time.perf_counter()
+        out = self.cloud_fn(self.params, h)
+        jax.block_until_ready(out)
+        t_cloud = time.perf_counter() - t0
+        return out["logits"], RequestTiming(t_edge, t_transfer, t_cloud)
+
+    # -- memory accounting (Table I) --------------------------------------
+    def live_param_bytes(self) -> int:
+        if not self.ready:
+            return 0
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.params))

@@ -1,0 +1,158 @@
+"""Per-layer profiling: the data behind Eq. 1 (T_inf = T_e + T_t + T_c).
+
+The paper profiles every layer's compute time on edge and cloud plus the
+boundary activation size (section II-A).  We support both of the paper's
+cited methods:
+
+* measured  — run each unit on this host and time it (``profile_cnn``,
+  ``profile_transformer_measured``) — the "real-time benchmarking" path [6];
+* analytic  — FLOPs/spec estimation (``profile_transformer``) — the
+  "estimation-based" path [18]; required for the 7B-76B archs that cannot
+  execute on a laptop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, CNNConfig
+from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, DeviceSpec
+from repro.core.network import NetworkModel
+
+
+@dataclass
+class UnitProfile:
+    name: str
+    t_edge: float           # s, compute on edge
+    t_cloud: float          # s, compute on cloud
+    boundary_bytes: int     # activation bytes if we split AFTER this unit
+    flops: float = 0.0
+
+
+@dataclass
+class ModelProfile:
+    arch: str
+    units: List[UnitProfile]
+
+    def num_splits(self) -> int:
+        return len(self.units) - 1  # split after unit i, i in [0, n-2]
+
+    def latency(self, split: int, net: NetworkModel):
+        """(T_e, T_t, T_c) for a split after unit `split` (Eq. 1)."""
+        t_e = sum(u.t_edge for u in self.units[:split + 1])
+        t_c = sum(u.t_cloud for u in self.units[split + 1:])
+        t_t = net.transfer_time(self.units[split].boundary_bytes)
+        return t_e, t_t, t_c
+
+    def total_latency(self, split: int, net: NetworkModel) -> float:
+        return sum(self.latency(split, net))
+
+
+# ---------------------------------------------------------------------------
+# measured profiling (CNNs + reduced transformers)
+# ---------------------------------------------------------------------------
+
+def _time_fn(fn, *args, reps=3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def profile_cnn(cfg: CNNConfig, params, units, shapes, *, batch=1,
+                edge=EDGE_SPEC, cloud=CLOUD_SPEC, dtype=jnp.float32,
+                reps=3) -> ModelProfile:
+    """Measured per-unit times on this host, scaled to edge/cloud specs.
+
+    The host measurement fixes the *relative* per-layer cost; the edge/cloud
+    specs set absolute scale (host flops assumed = cloud spec).
+    """
+    from repro.models import cnn as cnn_mod
+    x = jnp.zeros((batch, cfg.input_hw, cfg.input_hw, cfg.input_ch), dtype)
+    out_profiles = []
+    scale_edge = cloud.flops / edge.flops
+    for i, (name, fn) in enumerate(units):
+        jf = jax.jit(lambda p, x, fn=fn: fn(p, x))
+        t = _time_fn(jf, params[i], x, reps=reps)
+        bbytes = int(np.prod(shapes[i])) * batch * np.dtype(np.float32).itemsize
+        out_profiles.append(UnitProfile(name, t * scale_edge, t, bbytes))
+        x = fn(params[i], x)
+    return ModelProfile(cfg.name, out_profiles)
+
+
+# ---------------------------------------------------------------------------
+# analytic profiling (full-size transformers)
+# ---------------------------------------------------------------------------
+
+def _layer_flops(cfg: ArchConfig, kind: str, tokens: int, seq: int) -> float:
+    """Forward FLOPs of one decoder layer over `tokens` tokens."""
+    d = cfg.d_model
+    if kind == "attn":
+        hd, H, KH = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+        proj = 2 * tokens * d * hd * (2 * H + 2 * KH)
+        ctx = min(seq, cfg.sliding_window or seq)
+        att = 2 * 2 * tokens * ctx * H * hd   # QK^T + PV (upper bound, causal)
+        if cfg.moe is not None:
+            m = cfg.moe
+            ffn = 2 * tokens * 3 * d * (m.top_k * m.expert_d_ff
+                                        + (m.shared_d_ff if m.num_shared_experts else 0))
+        else:
+            n_mats = 3 if cfg.gated_mlp else 2
+            ffn = 2 * tokens * n_mats * d * cfg.d_ff
+        return proj + att + ffn
+    if kind == "mamba1":
+        di, s = cfg.d_inner, cfg.ssm
+        return 2 * tokens * (d * 2 * di + di * (s.dt_rank + 2 * s.d_state)
+                             + s.dt_rank * di + di * d) \
+            + 6 * tokens * di * s.d_state
+    if kind == "mamba2":
+        di, s = cfg.d_inner, cfg.ssm
+        H = di // s.head_dim
+        return 2 * tokens * d * (2 * di + 2 * s.d_state + H) \
+            + 2 * tokens * di * d + 6 * tokens * di * s.d_state
+    raise ValueError(kind)
+
+
+def profile_transformer(cfg: ArchConfig, *, seq: int, batch: int = 1,
+                        edge: DeviceSpec = EDGE_SPEC,
+                        cloud: DeviceSpec = CLOUD_SPEC,
+                        act_bytes: int = 2) -> ModelProfile:
+    """Analytic Eq.-1 profile.  Units: [embed] + decoder layers + [head].
+
+    Boundary bytes between decoder layers are batch*seq*d_model*act_bytes —
+    constant for transformers, which is itself a finding (section 4 of
+    DESIGN.md): the optimal split for a uniform-width transformer is driven
+    purely by compute balance, unlike VGG (Fig. 2) where activation volume
+    varies 100x across layers.
+    """
+    tokens = batch * seq
+    bbytes = batch * seq * cfg.d_model * act_bytes
+    units = [UnitProfile("embed", 0.0, 0.0, bbytes, 0.0)]
+    kinds = list(cfg.layer_kinds())
+    if cfg.family == "hybrid" and cfg.hybrid_period:
+        # insert the shared attn applications as units
+        out = []
+        for i, k in enumerate(kinds):
+            out.append(k)
+            if (i + 1) % cfg.hybrid_period == 0:
+                out.append("attn")
+        kinds = out
+    for i, kind in enumerate(kinds):
+        fl = _layer_flops(cfg, kind, tokens, seq)
+        units.append(UnitProfile(
+            f"{kind}{i}",
+            fl / (edge.flops * edge.mfu),
+            fl / (cloud.flops * cloud.mfu),
+            bbytes, fl))
+    head_fl = 2 * tokens * cfg.d_model * cfg.vocab_size
+    units.append(UnitProfile("head", head_fl / (edge.flops * edge.mfu),
+                             head_fl / (cloud.flops * cloud.mfu), 0, head_fl))
+    return ModelProfile(cfg.name, units)

@@ -1,0 +1,174 @@
+"""Stage-wise model execution — the "sequence of layers" abstraction.
+
+A model is a list of UNITS: unit 0 = embedding (+frontend/encoder), units
+1..L = decoder layers, unit L+1 = LM head.  A split after unit ``k`` puts
+units [0, k] on the edge stage and (k, N) on the cloud stage; the boundary
+tensor is the hidden state (plus, for whisper, the encoder context — the
+encoder itself is ONE unit, mirroring the paper's rule that parallel paths
+are not split).
+
+``StageRunner.stage_fn(lo, hi)`` returns a jitted callable for the unit
+range; the lru-cached variant is the Dynamic-Switching "same container"
+(warm) path, while ``fresh_stage_fn`` deliberately builds a new closure so
+jit must retrace+recompile — the "new container" (cold) path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as Lyr
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+
+
+def _layer_at(params, i):
+    return jax.tree.map(lambda a: a[i], params["layers"])
+
+
+class StageRunner:
+    """Executes unit ranges [lo, hi) of a model for full-seq inference."""
+
+    def __init__(self, cfg: ArchConfig, params, attn_impl: str = "chunked"):
+        self.cfg = cfg
+        self.params = params
+        self.attn_impl = attn_impl
+        self._jit_cache: Dict[Tuple[int, int], Any] = {}
+
+    # -- unit layout --------------------------------------------------
+    @property
+    def num_units(self) -> int:
+        return self.cfg.num_layers + 2
+
+    # -- execution ----------------------------------------------------
+    def _apply_unit(self, state: Dict[str, Any], i: int) -> Dict[str, Any]:
+        cfg, params = self.cfg, self.params
+        if i == 0:
+            x = T.embed_inputs(cfg, params, state)
+            if cfg.family == "audio":
+                x = x + Lyr.sinusoidal_positions(
+                    x.shape[1], cfg.d_model).astype(x.dtype)[None]
+                enc = T.encode_audio(cfg, params, state["frames"],
+                                     attn_impl=self.attn_impl, remat=False)
+                return {"h": x, "enc": enc}
+            return {"h": x}
+        if i == self.num_units - 1:
+            x = T._apply_norm(cfg, params["final_norm"], state["h"])
+            logits = (x @ T.lm_head_weights(cfg, params)).astype(jnp.float32)
+            return {"logits": logits}
+        # decoder layer i-1
+        li = i - 1
+        x = state["h"]
+        rope_cs = T._rope_for(cfg, x.shape[1])
+        window = cfg.sliding_window
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm", "audio"):
+            lp = _layer_at(params, li)
+            x, _, _ = T.attn_block_full(cfg, lp, x, rope_cs,
+                                        impl=self.attn_impl, window=window)
+            if fam == "audio":
+                ckv = T._enc_cross_kv(cfg, lp, state["enc"])
+                x = T.cross_block_full(cfg, lp, x, ckv, impl=self.attn_impl)
+        elif fam == "ssm":
+            lp = _layer_at(params, li)
+            h = T._apply_norm(cfg, lp["ln"], x)
+            y, _ = SSM.mamba1_block(lp["mamba"], h, cfg=cfg)
+            x = x + y
+        elif fam == "hybrid":
+            lp = _layer_at(params, li)
+            h = T._apply_norm(cfg, lp["ln"], x)
+            y, _ = SSM.mamba2_block(lp["mamba"], h, cfg=cfg)
+            x = x + y
+            if cfg.hybrid_period and (li + 1) % cfg.hybrid_period == 0:
+                x, _, _ = T.attn_block_full(cfg, params["shared"], x, rope_cs,
+                                            impl=self.attn_impl, window=window)
+        else:
+            raise ValueError(fam)
+        out = dict(state)
+        out["h"] = x
+        return out
+
+    def run_units(self, state, lo: int, hi: int):
+        for i in range(lo, hi):
+            state = self._apply_unit(state, i)
+        return state
+
+    # -- compiled stage functions --------------------------------------
+    def _make_fn(self, lo: int, hi: int):
+        def fn(params, state):
+            runner = StageRunner(self.cfg, params, self.attn_impl)
+            return runner.run_units(state, lo, hi)
+        return fn
+
+    def stage_fn(self, lo: int, hi: int):
+        """Warm path: cached jitted callable (Dynamic Switching, same container)."""
+        key = (lo, hi)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(self._make_fn(lo, hi))
+        return self._jit_cache[key]
+
+    def fresh_stage_fn(self, lo: int, hi: int):
+        """Cold path: new closure => jit retrace+recompile (new container)."""
+        return jax.jit(self._make_fn(lo, hi))
+
+    def boundary_bytes(self, split: int, batch: int, seq: int,
+                       act_bytes: int = 4) -> int:
+        """Bytes crossing the link for a split after unit `split`."""
+        cfg = self.cfg
+        n = batch * seq * cfg.d_model * act_bytes
+        if cfg.family == "audio":
+            n += batch * cfg.encoder.context_len * cfg.d_model * act_bytes
+        return n
+
+
+class CnnStageRunner:
+    """StageRunner-compatible executor for the paper's own CNN models
+    (video-analytics workload, Figs. 2-3): unit i = conv/pool/block/dense
+    layer; boundary activations VARY with depth, so the optimal split
+    actually moves with bandwidth."""
+
+    def __init__(self, cfg, key=None, params=None):
+        import jax as _jax
+        from repro.models import cnn as _cnn
+        self.cfg = cfg
+        key = key if key is not None else _jax.random.PRNGKey(0)
+        if params is None:
+            params, units, shapes = _cnn.build_cnn(cfg, key)
+        else:
+            _, units, shapes = _cnn.build_cnn(cfg, key)
+        self.params, self.units, self.shapes = params, units, shapes
+        self._cnn = _cnn
+        self._jit_cache: Dict[Tuple[int, int], Any] = {}
+
+    @property
+    def num_units(self) -> int:
+        return len(self.units)
+
+    def _make_fn(self, lo: int, hi: int):
+        units = self.units
+        last = hi == len(units)
+
+        def fn(params, state):
+            x = state["h"] if "h" in state else state["image"]
+            for i in range(lo, hi):
+                x = units[i][1](params[i], x)
+            return {"logits": x} if last else {"h": x}
+        return fn
+
+    def stage_fn(self, lo: int, hi: int):
+        key = (lo, hi)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(self._make_fn(lo, hi))
+        return self._jit_cache[key]
+
+    def fresh_stage_fn(self, lo: int, hi: int):
+        return jax.jit(self._make_fn(lo, hi))
+
+    def boundary_bytes(self, split: int, batch: int, seq: int = 1,
+                       act_bytes: int = 4) -> int:
+        import numpy as _np
+        return int(_np.prod(self.shapes[split])) * batch * act_bytes

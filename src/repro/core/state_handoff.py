@@ -1,0 +1,76 @@
+"""State hand-off accounting for repartitioning STATEFUL pipelines.
+
+The paper's video pipeline is stateless per frame, so Dynamic Switching
+only moves requests.  A transformer decode pipeline is stateful: when the
+split moves from layer a to layer b, the KV/SSM state of layers [a, b)
+changes sides and must cross the link (or be recomputed by re-prefilling).
+
+This module prices both options per architecture — the quantity that
+decides which model families suit live repartitioning at all
+(DESIGN.md section 4: falcon-mamba hands off MBs where yi-34b hands off GBs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig
+from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC
+from repro.core.network import NetworkModel
+
+
+def per_layer_state_bytes(cfg: ArchConfig, *, seq_len: int, batch: int = 1,
+                          act_bytes: int = 2) -> float:
+    """Decode-state bytes of ONE decoder layer at context `seq_len`."""
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        conv = (s.d_conv - 1) * cfg.d_inner * act_bytes
+        ssm = cfg.d_inner * s.d_state * 4                    # f32 state
+        return batch * (conv + ssm)
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        conv = (s.d_conv - 1) * (cfg.d_inner + 2 * s.d_state) * act_bytes
+        ssm = cfg.d_inner * s.d_state * 4
+        mamba = batch * (conv + ssm)
+        # shared attention KV amortised over the layers of one period
+        window = cfg.sliding_window or seq_len
+        kv = batch * 2 * cfg.num_kv_heads * cfg.head_dim \
+            * min(seq_len, window) * act_bytes / max(cfg.hybrid_period, 1)
+        return mamba + kv
+    # attention families
+    window = cfg.sliding_window or seq_len
+    return batch * 2 * cfg.num_kv_heads * cfg.head_dim \
+        * min(seq_len, window) * act_bytes
+
+
+@dataclass
+class HandoffPlan:
+    moved_layers: int
+    moved_bytes: int
+    t_transfer: float        # ship the state across the link
+    t_recompute: float       # or re-prefill the moved layers on the target
+    best: str                # 'transfer' | 'recompute'
+
+    @property
+    def t_best(self) -> float:
+        return min(self.t_transfer, self.t_recompute)
+
+
+def plan_handoff(cfg: ArchConfig, *, old_split: int, new_split: int,
+                 seq_len: int, batch: int, net: NetworkModel,
+                 target=CLOUD_SPEC) -> HandoffPlan:
+    """Price moving the decode state of layers between the splits."""
+    moved = abs(new_split - old_split)
+    per_layer = per_layer_state_bytes(cfg, seq_len=seq_len, batch=batch)
+    moved_bytes = int(moved * per_layer)
+    t_transfer = net.transfer_time(moved_bytes) if moved else 0.0
+    # recompute: re-run the moved layers over the full context on the target
+    from repro.core.profiler import _layer_flops
+    kinds = cfg.layer_kinds()
+    flops = sum(
+        _layer_flops(cfg, kinds[min(i, len(kinds) - 1)],
+                     tokens=batch * seq_len, seq=seq_len)
+        for i in range(min(old_split, new_split),
+                       min(max(old_split, new_split), len(kinds))))
+    t_recompute = flops / (target.flops * target.mfu) if moved else 0.0
+    best = "transfer" if t_transfer <= t_recompute else "recompute"
+    return HandoffPlan(moved, moved_bytes, t_transfer, t_recompute, best)

@@ -1,0 +1,174 @@
+"""Repartitioning strategies (the heart of the paper, section III).
+
+Strategy -> paper mechanism -> JAX mechanism:
+
+``pause_resume``  (baseline, Eq. 2: t_downtime = t_update)
+    Serving halts; the app "resumes with new metadata", which forces it to
+    reload its model from storage and rebuild both stages cold.  Nothing is
+    served during the window (full outage).
+
+``switch_a``  (Scenario A, Eq. 3: t_downtime = t_switch)
+    A standby pipeline for the alternate partitioning is ALWAYS built.
+    Switching is an atomic pointer swap.  Case 1: standby owns a second
+    weight copy (2x memory).  Case 2: standby shares the donor weight
+    buffers (1x memory).  After the swap a new standby is rebuilt in the
+    background (not part of downtime, reported separately).
+
+``switch_b1``  (Scenario B Case 1, Eq. 4: t_downtime = t_init + t_switch)
+    Cold build of a NEW pipeline (fresh closures => retrace+recompile, own
+    weight placement = container image load) while the old pipeline keeps
+    serving (degraded).  Then swap.
+
+``switch_b2``  (Scenario B Case 2, Eq. 5: t_downtime = t_exec + t_switch)
+    Warm build INSIDE the existing container: reuse the runner's jit cache
+    and the donor weight buffers; only stage rebind/compile executes.
+
+All strategies return a SwitchReport; the ServingSimulator (downtime.py)
+replays these windows against a frame stream to produce Figs. 11-15.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.core.network import NetworkModel
+from repro.core.pipeline import BuildReport, EdgeCloudPipeline
+from repro.core.stages import StageRunner
+
+
+@dataclass
+class SwitchReport:
+    strategy: str
+    old_split: int
+    new_split: int
+    downtime: float               # the paper's t_downtime for this strategy
+    t_build: float = 0.0          # t_update / t_init / t_exec component
+    t_switch: float = 0.0
+    full_outage: bool = False     # True only for pause_resume
+    background_cost: float = 0.0  # e.g. standby rebuild after switch_a
+    build_detail: Optional[BuildReport] = None
+
+
+class PipelineManager:
+    """Owns the active (and optional standby) pipeline plus the checkpoint
+    that the Pause-and-Resume baseline reloads from."""
+
+    def __init__(self, runner: StageRunner, split: int, net: NetworkModel,
+                 sample_inputs, *, checkpoint_path: Optional[str] = None,
+                 standby_split: Optional[int] = None,
+                 standby_owns_weights: bool = True):
+        self.runner = runner
+        self.net = net
+        self.sample_inputs = sample_inputs
+        self.active = EdgeCloudPipeline(runner, split, net)
+        self.active.build(sample_inputs, cold=False)
+        self.standby: Optional[EdgeCloudPipeline] = None
+        self.standby_owns_weights = standby_owns_weights
+        if checkpoint_path is None:
+            fd, checkpoint_path = tempfile.mkstemp(suffix=".npz")
+            os.close(fd)
+            from repro.checkpoint import save_pytree
+            save_pytree(runner.params, checkpoint_path)
+        self.checkpoint_path = checkpoint_path
+        if standby_split is not None:
+            self.build_standby(standby_split)
+
+    # -- scenario A standby ------------------------------------------------
+    def build_standby(self, split: int) -> float:
+        t0 = time.perf_counter()
+        self.standby = EdgeCloudPipeline(
+            self.runner, split, self.net,
+            owns_weights=self.standby_owns_weights)
+        self.standby.build(self.sample_inputs, cold=self.standby_owns_weights)
+        return time.perf_counter() - t0
+
+    # -- serving entry -------------------------------------------------
+    def serve(self, inputs):
+        if self.active is None:
+            raise RuntimeError("service outage: pipeline paused")
+        return self.active.process(inputs)
+
+    def set_network(self, net: NetworkModel):
+        self.net = net
+        if self.active is not None:
+            self.active.net = net
+        if self.standby is not None:
+            self.standby.net = net
+
+    # -- strategies ------------------------------------------------------
+    def pause_resume(self, new_split: int) -> SwitchReport:
+        old = self.active.split
+        t0 = time.perf_counter()
+        self.active = None                          # (ii) pause
+        pipe = EdgeCloudPipeline(self.runner, new_split, self.net)
+        detail = pipe.build(self.sample_inputs, cold=True,   # (iii) update
+                            reload_from=self.checkpoint_path)
+        self.active = pipe                          # (iv) resume
+        dt = time.perf_counter() - t0
+        return SwitchReport("pause_resume", old, new_split, downtime=dt,
+                            t_build=detail.total, full_outage=True,
+                            build_detail=detail)
+
+    def switch_a(self, new_split: int) -> SwitchReport:
+        assert self.standby is not None and self.standby.ready, \
+            "Scenario A requires the always-running standby pipeline"
+        old = self.active.split
+        if self.standby.split != new_split:
+            # standby was built for a different operating point; Scenario A
+            # still switches to it (it IS the alternate configuration).
+            new_split = self.standby.split
+        t0 = time.perf_counter()
+        self.active, self.standby = self.standby, None       # atomic swap
+        t_switch = time.perf_counter() - t0
+        # background: rebuild the redundant pipeline for the *old* config
+        bg = self.build_standby(old)
+        return SwitchReport("switch_a", old, new_split, downtime=t_switch,
+                            t_switch=t_switch, background_cost=bg)
+
+    def switch_b1(self, new_split: int) -> SwitchReport:
+        old = self.active.split
+        t0 = time.perf_counter()
+        pipe = EdgeCloudPipeline(self.runner, new_split, self.net,
+                                 owns_weights=True)           # new container
+        detail = pipe.build(self.sample_inputs, cold=True)
+        t_build = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.active = pipe                                    # redirect
+        t_switch = time.perf_counter() - t1
+        return SwitchReport("switch_b1", old, new_split,
+                            downtime=t_build + t_switch, t_build=t_build,
+                            t_switch=t_switch, build_detail=detail)
+
+    def switch_b2(self, new_split: int) -> SwitchReport:
+        old = self.active.split
+        t0 = time.perf_counter()
+        pipe = EdgeCloudPipeline(self.runner, new_split, self.net)
+        detail = pipe.build(self.sample_inputs, cold=False)   # same container
+        t_build = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.active = pipe
+        t_switch = time.perf_counter() - t1
+        return SwitchReport("switch_b2", old, new_split,
+                            downtime=t_build + t_switch, t_build=t_build,
+                            t_switch=t_switch, build_detail=detail)
+
+    def repartition(self, strategy: str, new_split: int) -> SwitchReport:
+        return {"pause_resume": self.pause_resume,
+                "switch_a": self.switch_a,
+                "switch_b1": self.switch_b1,
+                "switch_b2": self.switch_b2}[strategy](new_split)
+
+    # -- Table I memory accounting ----------------------------------------
+    def memory_report(self) -> Dict[str, int]:
+        base = self.active.live_param_bytes() if self.active else 0
+        extra = 0
+        if self.standby is not None and self.standby.ready \
+                and self.standby.owns_weights:
+            extra = self.standby.live_param_bytes()
+        return {"initial_bytes": base, "additional_bytes": extra,
+                "total_bytes": base + extra}

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (cache_shardings, input_shardings,
+                                        param_shardings)
+from repro.distributed.roofline import Roofline, collective_bytes

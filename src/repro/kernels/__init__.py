@@ -1,0 +1,3 @@
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba1_scan

@@ -1,0 +1,108 @@
+"""Pallas TPU flash-decode attention: one query token vs a long KV cache.
+
+Motivation (EXPERIMENTS.md, hillclimb pair A): after the sharding/layout
+fixes, yi-34b decode_32k is left ~3x above its roofline floor because the
+XLA fallback reads the cache through separate mask/softmax/PV ops.  This
+kernel streams the HEADS-MAJOR cache (B, KH, S, D) through VMEM once,
+keeping the (G, 1)/(G, D) online-softmax state in scratch — the cache is
+touched exactly once per step, which IS the decode roofline.
+
+Grid: (B, KH, num_kv_blocks); the kv-block axis is innermost (sequential on
+TPU), so scratch persists across it.  The GQA group dim G rides inside the
+block as the "rows" of a (G, block_k) score tile.  Invalid ring slots
+(kpos >= pos) are masked via a scalar `pos` operand in SMEM.
+
+Validated against ref.decode_attention_ref in interpret mode (tests/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_k, num_blocks, seq):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+    k_start = kj * block_k
+
+    @pl.when(k_start < pos)       # skip blocks past the valid prefix
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (block_k, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(q.shape[-1]))         # (G, block_k)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.logical_and(kpos < pos, kpos < seq)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_attention(q, k_cache, v_cache, *, pos, block_k=512,
+                           interpret=None):
+    """q: (B, 1, H, D); k/v_cache HEADS-MAJOR (B, KH, S, D); pos: scalar
+    count of valid entries.  Returns (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    KH, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    block_k = min(block_k, S)
+    nb = -(-S // block_k)
+    pad = nb * block_k - S
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qg = q.reshape(B, KH, G, D)
+    pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 \
+        else pos.astype(jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               num_blocks=nb, seq=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, kp, vp)
+    return out.reshape(B, 1, H, D)

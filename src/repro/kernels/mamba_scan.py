@@ -1,0 +1,109 @@
+"""Pallas TPU chunked selective scan (Mamba-1).
+
+TPU adaptation: the CUDA selective-scan kernel parallelises over channels
+within a thread block and streams time sequentially per thread.  On TPU we
+tile the channel dimension into VMEM-sized blocks (grid dims b, channel
+block) and keep the recurrent state h (block_d, N) resident in VMEM scratch
+across the *sequential* chunk grid dimension — the chunk dimension plays the
+role CUDA's sequential loop plays, but the state never leaves VMEM between
+chunks.  The inner per-timestep update is VPU elementwise work (diagonal A),
+(block_d x N) wide, which is the natural TPU layout for N=16.
+
+Validated against ref.mamba1_scan_ref in interpret mode (tests/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, h0_ref,
+                 y_ref, hout_ref, h_scr, *, chunk, num_chunks):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)    # (block_d, N)
+
+    a = a_ref[...].astype(jnp.float32)                # (block_d, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)       # (block_d,)
+        x_t = x_ref[0, t].astype(jnp.float32)         # (block_d,)
+        b_t = b_ref[0, t].astype(jnp.float32)         # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)         # (N,)
+        decay = jnp.exp(dt_t[:, None] * a)            # (block_d, N)
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1)      # (block_d,)
+        y_ref[0, t] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(cj == num_chunks - 1)
+    def _finish():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def mamba1_scan(dt, Bc, Cc, x, A, h0=None, *, chunk=256, block_d=512,
+                interpret=None):
+    """dt/x: (B,S,Di)  Bc/Cc: (B,S,N)  A: (Di,N)  h0: (B,Di,N) or None.
+
+    Returns (y (B,S,Di), h_final (B,Di,N)).
+    """
+    B, S, Di = x.shape
+    N = Bc.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+    chunk = min(chunk, S)
+    block_d = min(block_d, Di)
+    nc = -(-S // chunk)
+    nd = -(-Di // block_d)
+    pad_s = nc * chunk - S
+    pad_d = nd * block_d - Di
+
+    def pad(a, axes):
+        w = [(0, 0)] * a.ndim
+        for ax, p in axes:
+            w[ax] = (0, p)
+        return jnp.pad(a, w)
+
+    dtp = pad(dt, [(1, pad_s), (2, pad_d)])
+    xp = pad(x, [(1, pad_s), (2, pad_d)])
+    Bp = pad(Bc, [(1, pad_s)])
+    Cp = pad(Cc, [(1, pad_s)])
+    Ap = pad(A, [(0, pad_d)])
+    h0p = pad(h0, [(1, pad_d)])
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, num_chunks=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        # chunk dim LAST => sequential on TPU; h persists in scratch
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc * chunk, nd * block_d), x.dtype),
+            jax.ShapeDtypeStruct((B, nd * block_d, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(dtp, Bp, Cp, xp, Ap, h0p)
+    return y[:, :S, :Di], hout[:, :Di]

@@ -1,0 +1,32 @@
+"""jit'd public wrappers around the Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+
+
+@jax.jit
+def mamba1_scan(dt, Bc, Cc, x, A, h0=None):
+    return _ms.mamba1_scan(dt, Bc, Cc, x, A, h0=h0)
+
+
+@jax.jit
+def flash_decode_attention(q, k_cache, v_cache, pos):
+    from repro.kernels import flash_decode as _fd
+    return _fd.flash_decode_attention(q, k_cache, v_cache, pos=pos)
+
+
+@jax.jit
+def ssd_scan(dt, Bc, Cc, x, A, h0=None):
+    from repro.kernels import ssd_scan as _ssd
+    return _ssd.ssd_scan(dt, Bc, Cc, x, A, h0=h0)

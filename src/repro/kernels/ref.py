@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    return naive_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset)
+
+
+def decode_attention_ref(q, k_cache, v_cache, *, pos):
+    """Oracle for the flash-decode kernel (heads-major cache)."""
+    from repro.models.layers import decode_attention
+    return decode_attention(q, k_cache, v_cache, pos=pos)
+
+
+def mamba1_scan_ref(dt, Bc, Cc, x, A, h0=None):
+    """Sequential reference scan in fp32."""
+    B, S, Di = x.shape
+    N = Bc.shape[-1]
+    h = h0 if h0 is not None else jnp.zeros((B, Di, N), jnp.float32)
+
+    def step(h, t):
+        dt_t, b_t, c_t, x_t = t
+        decay = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A)
+        h = decay * h + (dt_t * x_t).astype(jnp.float32)[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        y = jnp.sum(h * c_t.astype(jnp.float32)[:, None, :], axis=-1)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, (dt.transpose(1, 0, 2), Bc.transpose(1, 0, 2),
+                                   Cc.transpose(1, 0, 2), x.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

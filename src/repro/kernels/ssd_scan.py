@@ -1,0 +1,114 @@
+"""Pallas TPU chunked SSD scan (Mamba-2) in MATMUL form.
+
+This is the genuinely TPU-native adaptation of the selective scan: where the
+CUDA kernel streams timesteps per thread, the SSD formulation turns a chunk
+into three MXU matmuls (Dao & Gu 2024), which is exactly what the 128x128
+systolic array wants:
+
+  within a chunk (alpha_t = exp(cumsum(dt*A))):
+    y = [ (C B^T) (.) decay-ratio (.) dt ]_tril @ x   +  alpha * (C @ h0^T)
+    h' = alpha_L * h0 + x^T @ (B (.) (alpha_L/alpha) dt)
+
+All decay ratios are <= 1 (A < 0), so the form is numerically stable.  The
+recurrent state h (P, N) stays in VMEM scratch across the sequential chunk
+grid dimension.  Validated against models.ssm.mamba2_scan in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, h0_ref, y_ref, hout_ref,
+                h_scr, *, chunk, num_chunks):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)       # (P, N)
+
+    a = a_ref[0]                                            # scalar A_h < 0
+    dt = dt_ref[0, 0].astype(jnp.float32)                   # (chunk,)
+    Bc = b_ref[0].astype(jnp.float32)                       # (chunk, N)
+    Cc = c_ref[0].astype(jnp.float32)                       # (chunk, N)
+    xh = x_ref[0, 0].astype(jnp.float32)                    # (chunk, P)
+
+    cum = jnp.cumsum(dt * a)                                # (chunk,)
+    alpha = jnp.exp(cum)
+    ratio = jnp.exp(cum[:, None] - cum[None, :])            # (t, s) <= 1
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = (s_idx <= t_idx).astype(jnp.float32)
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    M = CB * ratio * dt[None, :] * tril                     # (chunk, chunk)
+    h = h_scr[...]
+    y = jax.lax.dot_general(M, xh, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + alpha[:, None] * jax.lax.dot_general(
+        Cc, h, (((1,), (1,)), ((), ())),                    # (chunk, P)
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    w = jnp.exp(cum[-1] - cum) * dt                         # (chunk,)
+    h_scr[...] = alpha[-1] * h + jax.lax.dot_general(
+        xh, Bc * w[:, None], (((0,), (0,)), ((), ())),      # (P, N)
+        preferred_element_type=jnp.float32)
+
+    @pl.when(cj == num_chunks - 1)
+    def _finish():
+        hout_ref[0, 0] = h_scr[...]
+
+
+def ssd_scan(dt, Bc, Cc, x, A, h0=None, *, chunk=128, interpret=None):
+    """Mamba-2 SSD.  dt: (B,S,H)  Bc/Cc: (B,S,N)  x: (B,S,H,P)  A: (H,).
+
+    Returns (y (B,S,H,P) fp32-accurate, h_final (B,H,P,N) fp32).
+    """
+    B, S, H = dt.shape
+    P, N = x.shape[-1], Bc.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+
+    def padseq(arr):
+        return jnp.pad(arr, ((0, 0), (0, pad)) + ((0, 0),) * (arr.ndim - 2))
+
+    # head-major layouts: dt (B,H,S), x (B,H,S,P)
+    dtp = padseq(dt).transpose(0, 2, 1)
+    xp = padseq(x).transpose(0, 2, 1, 3)
+    Bp = padseq(Bc)
+    Cp = padseq(Cc)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),                  # chunk dim innermost = sequential
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc * chunk, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(dtp, Bp, Cp, xp, A.astype(jnp.float32), h0)
+    return y.transpose(0, 2, 1, 3)[:, :S], hout

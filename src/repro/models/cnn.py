@@ -1,0 +1,162 @@
+"""The paper's own CNN models (VGG-19, MobileNetV2) in pure JAX.
+
+These reproduce Figs. 2-3: per-partition-point latency profiles.  The model
+is expressed as an explicit list of (name, apply_fn, out_shape) units so the
+NEUKONFIG partitioner can run/profile any layer range — exactly the
+"sequence of layers" abstraction in the paper's section II-A.  MobileNetV2's
+inverted-residual regions are single units ("layers in the parallel path are
+not partitioned", section II-A).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CNNConfig, CNNLayer
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _dwconv(x, w, b, stride=1):
+    c = x.shape[-1]
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=c)
+    return y + b
+
+
+def _init_conv(key, k, cin, cout, dtype):
+    w = jax.random.normal(key, (k, k, cin, cout), dtype) * np.sqrt(2.0 / (k * k * cin))
+    return {"w": w, "b": jnp.zeros((cout,), dtype)}
+
+
+def build_cnn(cfg: CNNConfig, key, dtype=jnp.float32):
+    """Returns (params: list, units: list of (name, apply_fn), out_shapes).
+
+    out_shapes[i] is the activation shape *after* unit i for batch=1 — the
+    boundary tensor the partitioner prices for transfer (paper Figs. 2-3
+    orange line).
+    """
+    params: List[Any] = []
+    units: List[Tuple[str, Any]] = []
+    shapes: List[Tuple[int, ...]] = []
+    hw, ch = cfg.input_hw, cfg.input_ch
+    keys = iter(jax.random.split(key, 4 * len(cfg.layers) + 8))
+
+    for i, spec in enumerate(cfg.layers):
+        if spec.kind == "conv":
+            p = _init_conv(next(keys), spec.kernel, ch, spec.out_ch, dtype)
+            s = spec.stride
+
+            def fn(p, x, s=s):
+                return jax.nn.relu(_conv(x, p["w"], p["b"], s))
+            hw = -(-hw // s)
+            ch = spec.out_ch
+            units.append((f"conv{i}", fn))
+        elif spec.kind == "pool":
+            p = {}
+            s = min(spec.stride, hw)   # clamp (global pool at low input res)
+
+            def fn(p, x, s=s):
+                return jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, s, s, 1), (1, s, s, 1),
+                    "VALID")
+            hw = hw // s
+            units.append((f"pool{i}", fn))
+        elif spec.kind == "block":
+            # inverted-residual region = ONE partition unit
+            sub = []
+            in_ch = ch
+            for r in range(spec.repeats):
+                stride = spec.stride if r == 0 else 1
+                exp_ch = in_ch * spec.expand
+                bp = {}
+                if spec.expand != 1:
+                    bp["expand"] = _init_conv(next(keys), 1, in_ch, exp_ch, dtype)
+                kdw = next(keys)
+                bp["dw"] = {"w": jax.random.normal(
+                    kdw, (3, 3, 1, exp_ch), dtype) * np.sqrt(2.0 / 9),
+                    "b": jnp.zeros((exp_ch,), dtype)}
+                bp["project"] = _init_conv(next(keys), 1, exp_ch, spec.out_ch, dtype)
+                sub.append((bp, stride, in_ch == spec.out_ch and stride == 1))
+                in_ch = spec.out_ch
+                hw = -(-hw // stride)
+            p = [bp for bp, _, _ in sub]
+            meta = [(st, res) for _, st, res in sub]
+
+            def fn(p, x, meta=meta):
+                for bp, (stride, residual) in zip(p, meta):
+                    y = x
+                    if "expand" in bp:
+                        y = jax.nn.relu6(_conv(y, bp["expand"]["w"],
+                                               bp["expand"]["b"]))
+                    y = jax.nn.relu6(_dwconv(y, bp["dw"]["w"], bp["dw"]["b"],
+                                             stride))
+                    y = _conv(y, bp["project"]["w"], bp["project"]["b"])
+                    x = x + y if residual else y
+                return x
+            ch = spec.out_ch
+            units.append((f"block{i}", fn))
+        elif spec.kind == "flatten":
+            p = {}
+
+            def fn(p, x):
+                return x.reshape(x.shape[0], -1)
+            units.append((f"flatten{i}", fn))
+        elif spec.kind == "dense":
+            fan_in = ch * hw * hw if shapes and len(shapes[-1]) == 4 else ch
+            # fan_in after flatten: track via shapes below instead
+            p = None  # placeholder, fixed after shape calc
+            units.append((f"dense{i}", None))
+        else:
+            raise ValueError(spec.kind)
+        params.append(p)
+        if spec.kind == "flatten":
+            shapes.append((1, hw * hw * ch))
+            ch = hw * hw * ch
+            hw = 1
+        elif spec.kind == "dense":
+            shapes.append((1, spec.units))
+        else:
+            shapes.append((1, hw, hw, ch))
+
+    # second pass: dense layers (need flattened fan-in)
+    fan = None
+    for i, spec in enumerate(cfg.layers):
+        if spec.kind in ("flatten",):
+            fan = shapes[i][-1]
+        elif spec.kind == "dense":
+            k = next(keys)
+            w = jax.random.normal(k, (fan, spec.units), dtype) * np.sqrt(1.0 / fan)
+            params[i] = {"w": w, "b": jnp.zeros((spec.units,), dtype)}
+
+            def fn(p, x, last=(i == len(cfg.layers) - 1)):
+                y = x @ p["w"] + p["b"]
+                return y if last else jax.nn.relu(y)
+            units[i] = (f"dense{i}", fn)
+            fan = spec.units
+        elif fan is None:
+            pass
+    return params, units, shapes
+
+
+def run_range(params, units, x, lo, hi):
+    """Run units [lo, hi) — the partitioner's stage executor."""
+    for i in range(lo, hi):
+        name, fn = units[i]
+        x = fn(params[i], x)
+    return x
+
+
+def boundary_bytes(shapes, split, batch=1, bytes_per_elem=4):
+    """Bytes crossing the edge->cloud link when splitting after unit `split`."""
+    s = shapes[split]
+    return int(np.prod(s)) * batch * bytes_per_elem

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+This is what the multi-pod dry-run lowers against — weak-type-correct,
+shardable, no device allocation.  ``concrete_inputs`` builds the matching
+real arrays for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Text tokens after reserving frontend positions (vlm)."""
+    if cfg.frontend == "vision":
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """Returns (inputs_spec, cache_spec_or_None) for the given shape kind."""
+    B, S = shape.global_batch, shape.seq_len
+    St = _token_len(cfg, S)
+    if shape.kind == "train":
+        d = {"tokens": SDS((B, St), jnp.int32),
+             "labels": SDS((B, St), jnp.int32)}
+        if cfg.frontend == "vision":
+            d["vision_embeds"] = SDS((B, cfg.frontend_tokens, cfg.d_model), dtype)
+        if cfg.frontend == "audio":
+            d["frames"] = SDS((B, cfg.encoder.context_len, cfg.d_model), dtype)
+        return d, None
+    if shape.kind == "prefill":
+        d = {"tokens": SDS((B, St), jnp.int32)}
+        if cfg.frontend == "vision":
+            d["vision_embeds"] = SDS((B, cfg.frontend_tokens, cfg.d_model), dtype)
+        if cfg.frontend == "audio":
+            d["frames"] = SDS((B, cfg.encoder.context_len, cfg.d_model), dtype)
+        return d, None
+    if shape.kind == "decode":
+        window = T.effective_window(cfg, S)
+        cache = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S, dtype=dtype, window=window))
+        return {"token": SDS((B, 1), jnp.int32)}, cache
+    raise ValueError(shape.kind)
+
+
+def concrete_inputs(cfg: ArchConfig, shape: InputShape, key=None,
+                    dtype=jnp.float32):
+    """Real random arrays matching input_specs (for smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs, cache_spec = input_specs(cfg, shape, dtype=dtype)
+    ks = iter(jax.random.split(key, len(specs) + 1))
+    out = {}
+    for name, s in specs.items():
+        k = next(ks)
+        if np.issubdtype(s.dtype, np.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, dtype=s.dtype) * 0.02
+    cache = None
+    if cache_spec is not None:
+        window = T.effective_window(cfg, shape.seq_len)
+        cache = T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             dtype=dtype, window=window)
+    return out, cache

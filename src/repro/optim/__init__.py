@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWState, adamw, clip_by_global_norm,
+                               cosine_schedule, global_norm)

@@ -1,0 +1,75 @@
+"""Batched autoregressive serving loop (prefill + decode) for the examples
+and serving tests.  Single-host: requests are padded/batched to a fixed
+batch, prefilled once, then decoded step-by-step.
+
+The NEUKONFIG pipeline (core/) is the *stage-parallel stateless* server the
+paper evaluates; this module is the conventional KV-cache server used by
+the serve example and by the KV-migration (beyond-paper) demo.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    output: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class BatchingServer:
+    """Static batcher: pads a group of requests to one prefill + decode run."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_seq: int = 128,
+                 attn_impl: str = "chunked"):
+        self.cfg, self.params = cfg, params
+        self.max_seq = max_seq
+        self.attn_impl = attn_impl
+        self._decode = jax.jit(
+            lambda p, t, c: T.decode_step(cfg, p, t, c,
+                                          window=cfg.sliding_window,
+                                          attn_impl=attn_impl))
+
+    def run_batch(self, reqs: List[Request]) -> Dict[int, List[int]]:
+        cfg = self.cfg
+        B = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt       # left-pad
+        inputs = {"tokens": jnp.asarray(toks)}
+        if cfg.frontend == "vision":
+            inputs["vision_embeds"] = jnp.zeros(
+                (B, cfg.frontend_tokens, cfg.d_model))
+        if cfg.frontend == "audio":
+            inputs["frames"] = jnp.zeros(
+                (B, cfg.encoder.context_len, cfg.d_model))
+        logits, cache = T.prefill(cfg, self.params, inputs,
+                                  max_seq=self.max_seq,
+                                  attn_impl=self.attn_impl)
+        steps = max(r.max_new_tokens for r in reqs)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for i, r in enumerate(reqs):
+            r.output.append(int(tok[i, 0]))
+        for _ in range(steps - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for i, r in enumerate(reqs):
+                if not r.done:
+                    r.output.append(int(tok[i, 0]))
+        return {r.rid: r.output for r in reqs}

@@ -1,0 +1,2 @@
+from repro.training.steps import make_serve_step, make_train_step
+from repro.training.loop import train

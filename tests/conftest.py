@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the 512-device fake backend is
+# ONLY for launch/dryrun.py, which must run in its own process).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

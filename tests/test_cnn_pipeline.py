@@ -1,0 +1,55 @@
+"""CNN edge-cloud pipeline (the paper's own workload) through the full
+switching stack — split correctness + live repartition on the CNN runner."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import NetworkModel, PipelineManager, optimal_split, profile_cnn
+from repro.core.stages import CnnStageRunner
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("mobilenetv2"), input_hw=64)
+    runner = CnnStageRunner(cfg)
+    rng = np.random.default_rng(0)
+    img = {"image": jnp.asarray(rng.standard_normal(
+        (1, 64, 64, 3), dtype=np.float32))}
+    return cfg, runner, img
+
+
+def test_cnn_split_equals_monolithic(setup):
+    cfg, runner, img = setup
+    full = runner.fresh_stage_fn(0, runner.num_units)(runner.params, img)
+    for split in (0, 3, runner.num_units - 2):
+        mid = runner.stage_fn(0, split + 1)(runner.params, img)
+        out = runner.stage_fn(split + 1, runner.num_units)(runner.params, mid)
+        assert jnp.allclose(out["logits"], full["logits"], atol=1e-4), split
+
+
+def test_cnn_boundary_bytes_vary(setup):
+    """The property that makes CNN repartitioning non-trivial (Fig. 2-3)."""
+    cfg, runner, img = setup
+    sizes = {runner.boundary_bytes(i, 1) for i in range(runner.num_units - 1)}
+    assert len(sizes) > 3
+
+
+def test_cnn_pipeline_switches_live(setup):
+    cfg, runner, img = setup
+    profile = profile_cnn(cfg, runner.params, runner.units, runner.shapes,
+                          reps=1)
+    fast = optimal_split(profile, NetworkModel(20.0)).split
+    slow = optimal_split(profile, NetworkModel(0.5)).split
+    assert fast != slow          # the optimum must move for this test
+    mgr = PipelineManager(runner, split=fast, net=NetworkModel(20.0),
+                          sample_inputs=img)
+    ref, _ = mgr.serve(img)
+    mgr.set_network(NetworkModel(0.5))
+    rep = mgr.repartition("switch_b2", slow)
+    assert not rep.full_outage
+    out, _ = mgr.serve(img)
+    assert jnp.allclose(out, ref, atol=1e-4)

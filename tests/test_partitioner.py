@@ -1,0 +1,94 @@
+"""Partitioner (Eq. 1) unit + property tests, incl. the paper's Q1 claims."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.network import NetworkModel
+from repro.core.partitioner import (latency_curve, optimal_split,
+                                    should_repartition)
+from repro.core.profiler import (ModelProfile, UnitProfile,
+                                 profile_transformer)
+
+
+def _profile(edge_t, cloud_t, bbytes):
+    units = [UnitProfile(f"u{i}", e, c, b)
+             for i, (e, c, b) in enumerate(zip(edge_t, cloud_t, bbytes))]
+    return ModelProfile("toy", units)
+
+
+def test_eq1_latency_decomposition():
+    p = _profile([1, 2, 3], [0.5, 1, 1.5], [100, 200, 0])
+    net = NetworkModel(bandwidth_mbps=8.0, latency_ms=0.0)   # 1 MB/s
+    te, tt, tc = p.latency(0, net)
+    assert te == 1 and tc == pytest.approx(2.5)
+    assert tt == pytest.approx(100 * 8 / 8e6)
+
+
+def test_optimal_split_moves_with_bandwidth():
+    """The paper's core Q1 finding: bandwidth drop moves the split deeper
+    (keep more layers on the edge to ship a smaller activation)."""
+    # boundary sizes shrink with depth (VGG-like)
+    edge_t = [0.05] * 6
+    cloud_t = [0.01] * 6
+    bbytes = [4_000_000, 2_000_000, 1_000_000, 200_000, 50_000, 0]
+    p = _profile(edge_t, cloud_t, bbytes)
+    fast = optimal_split(p, NetworkModel(20.0))
+    slow = optimal_split(p, NetworkModel(5.0))
+    assert slow.split >= fast.split
+
+
+@hypothesis.given(
+    st.lists(st.floats(1e-4, 1.0), min_size=3, max_size=12),
+    st.lists(st.integers(0, 10_000_000), min_size=3, max_size=12),
+    st.floats(1.0, 100.0),
+)
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_optimal_split_is_argmin(edge_t, bbytes, bw):
+    n = min(len(edge_t), len(bbytes))
+    edge_t, bbytes = edge_t[:n], bbytes[:n]
+    p = _profile(edge_t, [t / 4 for t in edge_t], bbytes)
+    net = NetworkModel(bw)
+    best = optimal_split(p, net)
+    curve = latency_curve(p, net)
+    assert best.total == pytest.approx(min(c.total for c in curve))
+    # Eq. 1 self-consistency on every point
+    for c in curve:
+        te, tt, tc = p.latency(c.split, net)
+        assert c.total == pytest.approx(te + tt + tc)
+
+
+@hypothesis.given(st.floats(1.0, 50.0), st.floats(1.0, 50.0))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_should_repartition_consistent(bw1, bw2):
+    cfg = get_config("qwen2.5-3b")
+    p = profile_transformer(cfg, seq=128)
+    s1 = optimal_split(p, NetworkModel(bw1))
+    do, best = should_repartition(p, s1.split, NetworkModel(bw2))
+    if do:
+        assert best.split != s1.split
+        assert best.total <= p.total_latency(s1.split, NetworkModel(bw2))
+
+
+def test_memory_feasibility_filter():
+    """Paper section IV-B: at <=10% edge memory no partition can run."""
+    p = _profile([0.1] * 4, [0.05] * 4, [100] * 4)
+    mem = [300, 300, 300, 300]
+    with pytest.raises(RuntimeError):
+        optimal_split(p, NetworkModel(10.0), edge_mem_budget=200,
+                      unit_mem_bytes=mem)
+    ok = optimal_split(p, NetworkModel(10.0), edge_mem_budget=400,
+                       unit_mem_bytes=mem)
+    assert ok.split == 0     # only the first split fits
+
+
+def test_transformer_profile_structure():
+    cfg = get_config("mixtral-8x22b")
+    p = profile_transformer(cfg, seq=1024)
+    assert len(p.units) == cfg.num_layers + 2
+    # MoE layer flops reflect top-k, not all experts
+    attn_unit = p.units[1]
+    assert attn_unit.flops > 0
+    dense_equiv = 2 * 1024 * 3 * cfg.d_model * cfg.moe.num_experts * cfg.moe.expert_d_ff
+    assert attn_unit.flops < dense_equiv / 2

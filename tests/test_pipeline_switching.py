@@ -1,0 +1,173 @@
+"""NEUKONFIG system behaviour: pipeline correctness, switching strategies,
+downtime semantics (the paper's central claims as invariants)."""
+import dataclasses
+import time
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.downtime import simulate_window, sweep_fps
+from repro.core.network import (BandwidthTrace, NetworkModel, NetworkMonitor,
+                                PAPER_TRACE)
+from repro.core.pipeline import EdgeCloudPipeline
+from repro.core.stages import StageRunner
+from repro.core.switching import PipelineManager
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    runner = StageRunner(cfg, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0,
+                              cfg.vocab_size)
+    return cfg, runner, {"tokens": toks}
+
+
+def test_pipeline_equals_monolithic_any_split(setup):
+    """THE correctness invariant: a partitioned model computes the same
+    function as the unpartitioned one, for every split point."""
+    cfg, runner, inputs = setup
+    ref = runner.run_units(inputs, 0, runner.num_units)["logits"]
+    for split in range(runner.num_units - 1):
+        mid = runner.run_units(inputs, 0, split + 1)
+        out = runner.run_units(mid, split + 1, runner.num_units)["logits"]
+        assert jnp.max(jnp.abs(out - ref)) < 1e-4, f"split {split}"
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-7b",
+                                  "whisper-medium", "mixtral-8x22b",
+                                  "internvl2-76b"])
+def test_pipeline_equals_monolithic_other_families(arch, rng):
+    cfg = get_config(arch).reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    runner = StageRunner(cfg, params)
+    inputs = {"tokens": jax.random.randint(rng, (1, 12), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        inputs["vision_embeds"] = jax.random.normal(
+            rng, (1, cfg.frontend_tokens, cfg.d_model)) * 0.02
+    if cfg.frontend == "audio":
+        inputs["frames"] = jax.random.normal(
+            rng, (1, cfg.encoder.context_len, cfg.d_model)) * 0.02
+    ref = runner.run_units(inputs, 0, runner.num_units)["logits"]
+    for split in [0, runner.num_units // 2, runner.num_units - 2]:
+        mid = runner.run_units(inputs, 0, split + 1)
+        out = runner.run_units(mid, split + 1, runner.num_units)["logits"]
+        assert jnp.max(jnp.abs(out - ref)) < 1e-3, f"{arch} split {split}"
+
+
+def test_switch_preserves_service_output(setup):
+    """After any repartition the pipeline must still compute the same
+    function (only the split moved)."""
+    cfg, runner, inputs = setup
+    mgr = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                          sample_inputs=inputs, standby_split=2)
+    ref, _ = mgr.serve(inputs)
+    for strat, split in [("switch_a", 2), ("switch_b1", 0),
+                         ("switch_b2", 2), ("pause_resume", 1)]:
+        mgr.repartition(strat, split)
+        out, _ = mgr.serve(inputs)
+        assert jnp.max(jnp.abs(out - ref)) < 1e-4, strat
+
+
+def test_downtime_ordering(setup):
+    """Paper Figs. 11-13: t(A) << t(B2), and the baseline is a FULL outage
+    while dynamic switching keeps serving."""
+    cfg, runner, inputs = setup
+    mgr = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                          sample_inputs=inputs, standby_split=2)
+    rep_a = mgr.repartition("switch_a", 2)
+    rep_b2 = mgr.repartition("switch_b2", 0)
+    rep_pr = mgr.repartition("pause_resume", 2)
+    rep_b1 = mgr.repartition("switch_b1", 1)
+    assert rep_a.downtime < rep_b2.downtime
+    assert rep_a.downtime < 0.05          # paper: < 1 ms on their testbed
+    assert rep_pr.full_outage and not rep_b1.full_outage
+    assert not rep_a.full_outage and not rep_b2.full_outage
+    # baseline must reload weights from storage; dynamic switching must not
+    assert rep_pr.build_detail.t_weights > 0
+
+
+def test_switch_b2_warm_cache_faster_than_cold(setup):
+    """Scenario B Case 2 (same container) beats Case 1 (new container) when
+    the configuration was seen before — the paper's t_exec < t_init."""
+    cfg, runner, inputs = setup
+    mgr = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                          sample_inputs=inputs)
+    mgr.repartition("switch_b2", 2)     # warm the (0..2] stages
+    rep_b1 = mgr.repartition("switch_b1", 1)
+    mgr.repartition("switch_b2", 2)
+    rep_b2 = mgr.repartition("switch_b2", 1)   # split 1 stages warm again
+    assert rep_b2.downtime < rep_b1.downtime
+
+
+def test_memory_tradeoff_table(setup):
+    """Table I: standby-with-own-weights (A Case 1) doubles memory; shared
+    weights (Case 2) do not."""
+    cfg, runner, inputs = setup
+    mgr1 = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                           sample_inputs=inputs, standby_split=2,
+                           standby_owns_weights=True)
+    m1 = mgr1.memory_report()
+    assert m1["additional_bytes"] == pytest.approx(m1["initial_bytes"], rel=0.01)
+    mgr2 = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                           sample_inputs=inputs, standby_split=2,
+                           standby_owns_weights=False)
+    m2 = mgr2.memory_report()
+    assert m2["additional_bytes"] == 0
+    assert m2["total_bytes"] == m2["initial_bytes"]
+
+
+def test_monitor_detects_paper_trace():
+    mon = NetworkMonitor(PAPER_TRACE)
+    events = [t for t in np.arange(0, 90, 1.0) if mon.poll(float(t))]
+    assert len(events) == 2          # 20->5 at t=30, 5->20 at t=60
+    assert events[0] == pytest.approx(30, abs=1) \
+        and events[1] == pytest.approx(60, abs=1)
+
+
+def test_monitor_hysteresis_suppresses_flapping():
+    trace = BandwidthTrace(steps=[(0, 20)] + [(i, 20 if i % 2 else 5)
+                                              for i in range(1, 20)])
+    mon = NetworkMonitor(trace, hysteresis_s=5.0)
+    events = [t for t in np.arange(0, 20, 1.0) if mon.poll(float(t))]
+    assert len(events) <= 4
+
+
+# ---------------------------------------------------------------------------
+# frame-drop simulator (Figs. 14-15 semantics)
+# ---------------------------------------------------------------------------
+
+def test_pause_resume_drops_everything():
+    r = simulate_window(fps=30, window=6.0, service_time=0.01,
+                        full_outage=True)
+    assert r.drop_rate == 1.0            # paper: "no frames ... processed"
+
+
+def test_dynamic_switching_serves_during_window():
+    r = simulate_window(fps=30, window=6.0, service_time=0.01,
+                        full_outage=False)
+    assert 0.0 <= r.drop_rate < 1.0
+    assert r.served > 0
+
+
+@hypothesis.given(st.floats(1, 60), st.floats(0.001, 2.0))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_drop_rate_monotone_in_fps(window, service_time):
+    """Paper: 'more frames are dropped as the incoming frame rates increase'."""
+    rates = [simulate_window(fps=f, window=window, service_time=service_time,
+                             full_outage=False).drop_rate
+             for f in (1, 5, 15, 30)]
+    assert all(b >= a - 0.15 for a, b in zip(rates, rates[1:]))
+
+
+def test_zero_window_drops_nothing():
+    r = simulate_window(fps=30, window=0.0, service_time=1e-5,
+                        full_outage=False, horizon=1.0)
+    assert r.dropped == 0

@@ -1,0 +1,62 @@
+"""Input-spec coverage: every runnable (arch x shape) pair builds its
+ShapeDtypeStruct stand-ins (what the dry-run lowers against) — no device
+allocation, so the full 39-pair sweep runs in seconds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                           get_shape, pair_is_runnable)
+from repro.models import transformer as T
+from repro.models.specs import input_specs
+
+PAIRS = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES
+         if pair_is_runnable(a, s)[0]]
+
+
+def test_exactly_39_runnable_pairs():
+    assert len(PAIRS) == 39      # 40 minus whisper x long_500k (DESIGN.md s4)
+
+
+@pytest.mark.parametrize("arch,shape_name", PAIRS)
+def test_input_specs_build(arch, shape_name):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    specs, cache = input_specs(cfg, shape, dtype=jnp.bfloat16)
+    assert "tokens" in specs or "token" in specs
+    if shape.kind == "train":
+        assert specs["tokens"].shape == specs["labels"].shape
+        assert specs["tokens"].shape[0] == shape.global_batch
+    if shape.kind == "decode":
+        assert cache is not None
+        assert specs["token"].shape == (shape.global_batch, 1)
+        # ring cache never exceeds the effective window
+        w = T.effective_window(cfg, shape.seq_len)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            if leaf.ndim == 5:        # (L, B, KH, CL, hd)
+                assert leaf.shape[3] <= (w or shape.seq_len)
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        assert specs["vision_embeds"].shape[1] == cfg.frontend_tokens
+        # frontend tokens are carved out of seq_len
+        assert specs["tokens"].shape[-1] + cfg.frontend_tokens == shape.seq_len
+
+
+def test_effective_window_policy():
+    mix = get_config("mixtral-8x22b")
+    yi = get_config("yi-34b")
+    assert T.effective_window(mix, 4096) == 4096         # native SWA always
+    assert T.effective_window(yi, 32_768) is None        # full attention
+    assert T.effective_window(yi, 524_288) == 8192       # swa-variant kicks in
+
+
+def test_long500k_cache_fits_v5e():
+    """The ring caches that long_500k decodes against must fit 16 GB chips
+    after sharding (256-way worst case bound: total/256 < 16 GiB)."""
+    for arch in ("zamba2-7b", "falcon-mamba-7b", "mixtral-8x22b", "yi-34b"):
+        cfg = get_config(arch)
+        shape = get_shape("long_500k")
+        _, cache = input_specs(cfg, shape, dtype=jnp.bfloat16)
+        total = sum(np.prod(l.shape) * l.dtype.itemsize
+                    for l in jax.tree.leaves(cache))
+        assert total / 256 < 16 * 2**30, arch

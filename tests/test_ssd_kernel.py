@@ -1,0 +1,50 @@
+"""Mamba-2 SSD matmul-form Pallas kernel vs the sequential-scan oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.ssm import mamba2_scan
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 2, 16, 8, 8),
+    (2, 64, 4, 32, 16, 16),
+    (1, 50, 3, 8, 4, 16),     # padding (50 % 16 != 0)
+    (2, 16, 1, 64, 32, 16),   # single head, wide state
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_matches_sequential(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, H))).astype(dtype)
+    Bc = jax.random.normal(ks[1], (B, S, N), dtype)
+    Cc = jax.random.normal(ks[2], (B, S, N), dtype)
+    x = jax.random.normal(ks[3], (B, S, H, P), dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    y1, h1 = ssd_scan(dt, Bc, Cc, x, A, chunk=chunk)
+    y2, h2 = mamba2_scan(dt, Bc, Cc, x, A, chunk=chunk)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_state_continuation():
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, H)))
+    Bc = jax.random.normal(ks[1], (B, S, N))
+    Cc = jax.random.normal(ks[2], (B, S, N))
+    x = jax.random.normal(ks[3], (B, S, H, P))
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    y_full, h_full = ssd_scan(dt, Bc, Cc, x, A, chunk=8)
+    h, outs = None, []
+    for sl in (slice(0, 16), slice(16, 32)):
+        y, h = ssd_scan(dt[:, sl], Bc[:, sl], Cc[:, sl], x[:, sl], A,
+                        h0=h, chunk=8)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=1e-5)

@@ -1,0 +1,42 @@
+"""State hand-off pricing (beyond-paper: stateful pipeline repartitioning)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import NetworkModel, plan_handoff, per_layer_state_bytes
+
+
+def test_ssm_state_orders_of_magnitude_smaller_than_kv():
+    falcon = get_config("falcon-mamba-7b")
+    yi = get_config("yi-34b")
+    seq = 32_768
+    ssm = per_layer_state_bytes(falcon, seq_len=seq)
+    kv = per_layer_state_bytes(yi, seq_len=seq)
+    assert kv / ssm > 100          # GBs vs MBs story (DESIGN.md section 4)
+
+
+def test_sliding_window_caps_handoff():
+    mx = get_config("mixtral-8x22b")
+    b_short = per_layer_state_bytes(mx, seq_len=4096)
+    b_long = per_layer_state_bytes(mx, seq_len=524_288)
+    assert b_long == b_short       # window-bound, not context-bound
+
+
+def test_plan_handoff_picks_cheaper_side():
+    yi = get_config("yi-34b")
+    fast = NetworkModel(10_000.0, latency_ms=1)   # fat link -> transfer
+    slow = NetworkModel(1.0, latency_ms=1)        # starved link -> recompute
+    p_fast = plan_handoff(yi, old_split=10, new_split=20, seq_len=8192,
+                          batch=1, net=fast)
+    p_slow = plan_handoff(yi, old_split=10, new_split=20, seq_len=8192,
+                          batch=1, net=slow)
+    assert p_fast.moved_layers == p_slow.moved_layers == 10
+    assert p_fast.best == "transfer"
+    assert p_slow.best == "recompute"
+    assert p_slow.t_best <= p_slow.t_transfer
+
+
+def test_no_move_costs_nothing():
+    cfg = get_config("qwen2.5-3b")
+    p = plan_handoff(cfg, old_split=5, new_split=5, seq_len=1024, batch=1,
+                     net=NetworkModel(20.0))
+    assert p.moved_bytes == 0 and p.t_best == 0.0

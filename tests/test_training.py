@@ -1,0 +1,80 @@
+"""Training substrate: optimizer, loop convergence, checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.models import transformer as T
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, global_norm
+from repro.training import train
+
+
+def test_adamw_minimises_quadratic():
+    init, update = adamw(lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, abs=0.06)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-3)
+    assert float(lr(5)) == pytest.approx(0.5, abs=0.01)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0}
+    clipped, n = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_training_reduces_loss():
+    """E2E: a tiny dense model learns the synthetic Markov stream."""
+    cfg = get_config("qwen2.5-3b").reduced()
+    hist = train(cfg, steps=30, batch=8, seq=32, lr=3e-3, log_every=0,
+                 remat=False, log_fn=lambda s: None)
+    first = np.mean(hist["loss"][:5])
+    last = np.mean(hist["loss"][-5:])
+    assert last < first - 0.5, (first, last)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("zamba2-7b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt.npz")
+    nbytes = save_pytree(params, path)
+    assert nbytes > 0 and os.path.exists(path)
+    restored = load_pytree(path, like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpointed_model_same_outputs(tmp_path):
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "m.npz")
+    save_pytree(params, path)
+    restored = load_pytree(path, like=params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab_size)
+    l1, _ = T.prefill(cfg, params, {"tokens": toks}, max_seq=8)
+    l2, _ = T.prefill(cfg, restored, {"tokens": toks}, max_seq=8)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_synthetic_stream_learnable_structure():
+    cfg = get_config("qwen2.5-3b").reduced()
+    data = SyntheticTokens(cfg, batch=4, seq=16, seed=0)
+    b = next(iter(data))
+    # labels are next-token shifted
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
