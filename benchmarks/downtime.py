@@ -6,6 +6,13 @@ insensitive to it; this container has no cgroup analogue, so we vary the
 MODEL SIZE (the quantity that actually sets rebuild cost) and both
 bandwidth directions, and verify per-strategy magnitudes + ordering.
 
+The strategy list is the live registry (``benchmark_specs()``), so a new
+``@register_strategy`` class shows up here — and in the per-strategy
+JSONL summary rows (memory-vs-downtime, paper Table I x Figs. 11-13) —
+without touching this file.  ``switch_pool`` is swept over k, and
+``run_tradeoff`` replays a three-level bandwidth rotation where k=2 buys
+Scenario-A downtime that k<=1 cannot.
+
 Each (strategy, direction) is measured over a full 20->5->20 cycle so the
 warm-cache benefit of Scenario B Case 2 ("same container") is visible from
 the second switch onward, exactly like a long-running deployment.
@@ -13,6 +20,9 @@ the second switch onward, exactly like a long-running deployment.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import warnings
 
 import jax
 import numpy as np
@@ -21,13 +31,12 @@ from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core.network import NetworkModel
 from repro.core.stages import StageRunner
+from repro.core.strategies import StandbySplitMismatch, benchmark_specs
 from repro.core.switching import PipelineManager
 from repro.models import transformer as T
 
-STRATEGIES = ("pause_resume", "switch_a", "switch_b1", "switch_b2")
 
-
-def _make_mgr(cfg, params, split, standby_split):
+def _make_mgr(cfg, params, split, standby_split=None):
     runner = StageRunner(cfg, params)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
                               cfg.vocab_size)
@@ -36,41 +45,123 @@ def _make_mgr(cfg, params, split, standby_split):
                            standby_split=standby_split), {"tokens": toks}
 
 
+def _append_summary_jsonl(rows, name, out_dir="experiments/results"):
+    """One JSON row per strategy: the memory-vs-downtime trade-off table."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.jsonl")
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    return path
+
+
+def _cycle(mgr, inputs, spec, schedule, cycles):
+    """Run `cycles` passes of (bw, split) switches; returns (downs, reps)."""
+    downs, reps = [], []
+    for _ in range(cycles):
+        for bw, split in schedule:
+            mgr.set_network(NetworkModel(bw))
+            rep = mgr.repartition(spec, split)
+            downs.append(rep.downtime)
+            reps.append(rep)
+            mgr.serve(inputs)                  # service must be alive
+    return downs, reps
+
+
 def run(arch="qwen2.5-3b", num_layers=None, cycles=2):
     cfg = get_config(arch).reduced()
     if num_layers:
         cfg = dataclasses.replace(cfg, num_layers=num_layers)
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     split_fast, split_slow = 1, max(1, cfg.num_layers)  # 20 vs 5 Mbps optima
-    rows = []
-    for strat in STRATEGIES:
-        mgr, inputs = _make_mgr(cfg, params, split_fast, split_slow)
-        downs = []
-        for cyc in range(cycles):
-            for bw, split in ((5.0, split_slow), (20.0, split_fast)):
-                mgr.set_network(NetworkModel(bw))
-                rep = mgr.repartition(strat, split)
-                downs.append(rep.downtime)
-                rows.append({
-                    "name": f"{arch}-L{cfg.num_layers}/{strat}/cyc{cyc}"
-                            f"/to{int(bw)}mbps",
-                    "downtime_ms": round(rep.downtime * 1e3, 3),
-                    "t_build_ms": round(rep.t_build * 1e3, 3),
-                    "t_switch_ms": round(rep.t_switch * 1e3, 3),
-                    "full_outage": int(rep.full_outage),
-                })
-                out, _ = mgr.serve(inputs)   # service must be alive
-        print(f"# {arch} L{cfg.num_layers} {strat:13s}: "
+    schedule = ((5.0, split_slow), (20.0, split_fast))
+    rows, summary = [], []
+    for spec in benchmark_specs():
+        mgr, inputs = _make_mgr(cfg, params, split_fast)
+        strat = mgr.get_strategy(spec)
+        strat.prepare(mgr.pool, candidate_splits=(split_slow, split_fast))
+        downs, reps = _cycle(mgr, inputs, spec, schedule, cycles)
+        for i, rep in enumerate(reps):
+            bw = schedule[i % len(schedule)][0]
+            rows.append({
+                "name": f"{arch}-L{cfg.num_layers}/{spec}"
+                        f"/cyc{i // len(schedule)}/to{int(bw)}mbps",
+                "downtime_ms": round(rep.downtime * 1e3, 3),
+                "t_build_ms": round(rep.t_build * 1e3, 3),
+                "t_switch_ms": round(rep.t_switch * 1e3, 3),
+                "full_outage": int(rep.full_outage),
+                "cache_hit": int(rep.cache_hit),
+            })
+        mem = mgr.memory_report()
+        base = mem["initial_bytes"] or 1
+        summary.append({
+            "strategy": spec, "arch": arch, "num_layers": cfg.num_layers,
+            "trace": "20<->5",
+            "first_ms": round(downs[0] * 1e3, 3),
+            "steady_ms": round(float(np.mean(downs[2:])) * 1e3, 3),
+            "mem_total_mb": round(mem["total_bytes"] / 2 ** 20, 2),
+            "mem_x_baseline": round(mem["total_bytes"] / base, 2),
+            "full_outage": bool(reps[0].full_outage),
+        })
+        print(f"# {arch} L{cfg.num_layers} {spec:17s}: "
               f"first {downs[0]*1e3:8.1f} ms, steady "
-              f"{np.mean(downs[2:])*1e3:8.1f} ms")
+              f"{np.mean(downs[2:])*1e3:8.1f} ms, "
+              f"mem {summary[-1]['mem_x_baseline']:.1f}x")
     emit(rows, f"fig11_13_downtime_{arch}")
+    _append_summary_jsonl(summary,
+                          f"fig11_13_downtime_{arch}-L{cfg.num_layers}_summary")
     return rows
+
+
+def run_tradeoff(arch="qwen2.5-3b", cycles=3):
+    """Memory-for-downtime curve on a 3-level bandwidth rotation.
+
+    With three operating points in play, one standby (Scenario A, or
+    switch_pool k=1 predicting only the most recent split) keeps missing;
+    k=2 pre-builds both alternates and recovers pointer-swap downtime at
+    3x memory — the open end of the paper's Table I trade-off.
+    """
+    cfg = get_config(arch).reduced()
+    if cfg.num_layers < 3:
+        cfg = dataclasses.replace(cfg, num_layers=3)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    schedule = ((20.0, 1), (10.0, 2), (5.0, 3))
+    summary = []
+    for spec in benchmark_specs():
+        mgr, inputs = _make_mgr(cfg, params, 1)
+        strat = mgr.get_strategy(spec)
+        strat.prepare(mgr.pool, candidate_splits=tuple(s for _, s in schedule))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            downs, reps = _cycle(mgr, inputs, spec, schedule[1:], 1)
+            d2, r2 = _cycle(mgr, inputs, spec, schedule, cycles)
+            downs += d2
+            reps += r2
+        mem = mgr.memory_report()
+        base = mem["initial_bytes"] or 1
+        n = len(schedule) - 1                  # reps produced by the warmup
+        summary.append({
+            "strategy": spec, "arch": arch, "trace": "20->10->5 rotation",
+            "steady_ms": round(float(np.mean(downs[n:])) * 1e3, 3),
+            "hit_rate": round(float(np.mean([r.cache_hit
+                                             for r in reps[n:]])), 2),
+            "mem_x_baseline": round(mem["total_bytes"] / base, 2),
+            "standby_mismatches": len([w for w in caught if issubclass(
+                w.category, StandbySplitMismatch)]),
+        })
+        print(f"# rotation {spec:17s}: steady "
+              f"{summary[-1]['steady_ms']:8.1f} ms, hit rate "
+              f"{summary[-1]['hit_rate']:.2f}, mem "
+              f"{summary[-1]['mem_x_baseline']:.1f}x")
+    _append_summary_jsonl(summary, f"tradeoff_rotation_{arch}_summary")
+    return summary
 
 
 def main():
     run("qwen2.5-3b")
     run("qwen2.5-3b", num_layers=4)   # bigger rebuild => baseline grows
     run("falcon-mamba-7b")
+    run_tradeoff("qwen2.5-3b")
 
 
 if __name__ == "__main__":

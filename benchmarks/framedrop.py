@@ -15,6 +15,7 @@ from benchmarks.downtime import _make_mgr
 from repro.configs import get_config
 from repro.core.downtime import simulate_window
 from repro.core.network import NetworkModel
+from repro.core.strategies import benchmark_specs
 from repro.models import transformer as T
 
 FPS_LIST = (1, 5, 10, 15, 30)
@@ -25,11 +26,12 @@ def run(arch="qwen2.5-3b"):
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     rows = []
     for bw in (20.0, 5.0):
-        for strat in ("pause_resume", "switch_a", "switch_b1", "switch_b2"):
-            mgr, inputs = _make_mgr(cfg, params, 1, 2)
+        for strat in benchmark_specs():
+            mgr, inputs = _make_mgr(cfg, params, 1)
+            mgr.get_strategy(strat).prepare(mgr.pool, candidate_splits=(2, 1))
             mgr.set_network(NetworkModel(bw))
             _, timing = mgr.serve(inputs)      # old-pipeline service time
-            rep = mgr.repartition(strat, 2 if strat != "switch_a" else 2)
+            rep = mgr.repartition(strat, 2)
             for fps in FPS_LIST:
                 sim = simulate_window(fps=fps, window=rep.downtime,
                                       service_time=timing.t_edge,
@@ -43,7 +45,7 @@ def run(arch="qwen2.5-3b"):
                     "dropped": sim.dropped,
                 })
             last = [r for r in rows[-len(FPS_LIST):]]
-            print(f"# {strat:13s}@{int(bw):2d}mbps window "
+            print(f"# {strat:17s}@{int(bw):2d}mbps window "
                   f"{rep.downtime*1e3:8.1f}ms drop rates "
                   + " ".join(f"{r['value']:.2f}" for r in last))
     emit(rows, f"fig14_15_framedrop_{arch}")

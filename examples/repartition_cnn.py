@@ -1,16 +1,22 @@
 """The paper's own experiment (Figs. 2-3): profile VGG-19 / MobileNetV2
-layer-by-layer and show the optimal split moving as bandwidth changes.
+layer-by-layer and show the optimal split moving as bandwidth changes —
+then repartition a live MobileNetV2 pipeline once with every strategy in
+the registry to see the downtime/memory space the split move opens up.
 
     PYTHONPATH=src python examples/repartition_cnn.py
 """
+import dataclasses
+
 import jax
 
 from repro.configs import get_config
-from repro.core import NetworkModel, latency_curve, optimal_split, profile_cnn
+from repro.core import (NetworkModel, PipelineManager, benchmark_specs,
+                        latency_curve, optimal_split, profile_cnn)
+from repro.core.stages import CnnStageRunner
 from repro.models import cnn
 
 
-def main():
+def split_analysis():
     for arch in ("vgg19", "mobilenetv2"):
         cfg = get_config(arch)
         params, units, shapes = cnn.build_cnn(cfg, jax.random.PRNGKey(0))
@@ -26,6 +32,38 @@ def main():
         verdict = "MOVED" if f.split != s.split else "did not move"
         print(f"  -> optimal split {verdict} when bandwidth dropped "
               f"(paper Fig. {'2' if arch == 'vgg19' else '3'})")
+
+
+def strategy_space_demo(arch="mobilenetv2", hw=64):
+    """One live repartition per registered strategy (downtime + memory)."""
+    cfg = dataclasses.replace(get_config(arch), input_hw=hw)
+    runner = CnnStageRunner(cfg)
+    profile = profile_cnn(cfg, runner.params, runner.units, runner.shapes,
+                          reps=1)
+    import numpy as np
+    sample = {"image": jax.numpy.asarray(np.zeros(
+        (1, cfg.input_hw, cfg.input_hw, cfg.input_ch), np.float32))}
+    fast = optimal_split(profile, NetworkModel(20.0)).split
+    slow = optimal_split(profile, NetworkModel(5.0)).split
+    if slow == fast:
+        slow = fast + 1 if fast < runner.num_units - 2 else fast - 1
+    print(f"\n{arch}@{hw}px live strategy space (split {fast} -> {slow}):")
+    for spec in benchmark_specs():
+        mgr = PipelineManager(runner, split=fast, net=NetworkModel(20.0),
+                              sample_inputs=sample)
+        mgr.get_strategy(spec).prepare(mgr.pool,
+                                       candidate_splits=(slow, fast))
+        mgr.set_network(NetworkModel(5.0))
+        rep = mgr.repartition(spec, slow)
+        mem = mgr.memory_report()
+        mem_x = mem["total_bytes"] / max(mem["initial_bytes"], 1)
+        print(f"  {spec:17s} downtime {rep.downtime*1e3:9.2f} ms  "
+              f"mem {mem_x:4.1f}x  outage={int(rep.full_outage)}")
+
+
+def main():
+    split_analysis()
+    strategy_space_demo()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,9 @@
 # The paper's primary contribution: live DNN repartitioning with minimal
 # edge service downtime (NEUKONFIG, IC2E'21).
-from repro.core.controller import NeukonfigController, RepartitionEvent
+from repro.core.controller import (CooldownPolicy, HysteresisPolicy,
+                                   ImmediatePolicy, NeukonfigController,
+                                   RepartitionEvent, RepartitionPolicy,
+                                   get_policy)
 from repro.core.downtime import SimResult, simulate_window, sweep_fps
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, ICI_LINK_BW, TPU_V5E
 from repro.core.network import (BandwidthTrace, NetworkModel, NetworkMonitor,
@@ -8,9 +11,14 @@ from repro.core.network import (BandwidthTrace, NetworkModel, NetworkMonitor,
 from repro.core.partitioner import (SplitDecision, latency_curve,
                                     optimal_split, should_repartition)
 from repro.core.pipeline import EdgeCloudPipeline, RequestTiming
+from repro.core.pool import PipelinePool, PoolEntry
 from repro.core.profiler import (ModelProfile, UnitProfile, profile_cnn,
                                  profile_transformer)
 from repro.core.stages import StageRunner
 from repro.core.state_handoff import (HandoffPlan, per_layer_state_bytes,
                                       plan_handoff)
-from repro.core.switching import PipelineManager, SwitchReport
+from repro.core.strategies import (SwitchReport, SwitchStrategy,
+                                   available_strategies, benchmark_specs,
+                                   get_strategy, register_strategy,
+                                   strategy_class, unregister_strategy)
+from repro.core.switching import PipelineManager

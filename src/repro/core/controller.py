@@ -1,18 +1,28 @@
 """NeukonfigController: ties monitor -> partitioner -> strategy together.
 
 Drives a scripted bandwidth trace: on every detected change it recomputes
-the optimal split (Eq. 1) and, if the optimum moved, repartitions with the
-configured strategy.  Returns the full event log — this is the e2e driver
-used by examples/serve_pipeline.py and the downtime benchmarks.
+the optimal split (Eq. 1) and asks its ``RepartitionPolicy`` whether to
+act; if so it repartitions with the configured ``SwitchStrategy`` (any
+registry spec, e.g. ``"switch_b2"`` or ``"switch_pool(k=2)"``).  The
+strategy's ``observe`` hook is fed every network sample plus the model
+profile, which is how predictive strategies learn the bandwidth trend.
+
+Policies (the paper repartitions on *every* change; the others are the
+repartition-frequency control its section VI leaves as future work):
+
+* ``immediate``   — switch whenever the optimum moved and gains anything;
+* ``hysteresis``  — require a minimum relative latency gain;
+* ``cooldown``    — at most one switch per cooldown window.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.network import BandwidthTrace, NetworkModel, NetworkMonitor
 from repro.core.partitioner import optimal_split, should_repartition
 from repro.core.profiler import ModelProfile
+from repro.core.strategies import SwitchStrategy, parse_spec
 from repro.core.switching import PipelineManager, SwitchReport
 
 
@@ -25,17 +35,110 @@ class RepartitionEvent:
     report: Optional[SwitchReport]
 
 
+# ---------------------------------------------------------------------------
+# repartition policies
+# ---------------------------------------------------------------------------
+
+class RepartitionPolicy:
+    """Decides whether a moved optimum is worth acting on."""
+
+    name = "?"
+
+    def should_switch(self, t: float, *, current_split: int, best,
+                      profile: ModelProfile, net: NetworkModel) -> bool:
+        raise NotImplementedError
+
+    def notify_switched(self, t: float) -> None:
+        """Called after a switch actually happened."""
+
+
+class HysteresisPolicy(RepartitionPolicy):
+    """Switch only when the relative latency gain clears ``min_gain``."""
+
+    name = "hysteresis"
+
+    def __init__(self, min_gain: float = 0.05):
+        self.min_gain = min_gain
+
+    def should_switch(self, t, *, current_split, best, profile, net):
+        do, _ = should_repartition(profile, current_split, net, self.min_gain,
+                                   best=best)
+        return do
+
+
+class ImmediatePolicy(HysteresisPolicy):
+    """The paper's behaviour: act on every strictly-improving move."""
+
+    name = "immediate"
+
+    def __init__(self):
+        super().__init__(min_gain=0.0)
+
+
+class CooldownPolicy(RepartitionPolicy):
+    """Rate-limit switching: at most one repartition per window."""
+
+    name = "cooldown"
+
+    def __init__(self, cooldown_s: float = 10.0):
+        self.cooldown_s = cooldown_s
+        self._last_switch_t = float("-inf")
+
+    def should_switch(self, t, *, current_split, best, profile, net):
+        return best.split != current_split \
+            and (t - self._last_switch_t) >= self.cooldown_s
+
+    def notify_switched(self, t):
+        self._last_switch_t = t
+
+
+POLICIES: Dict[str, type] = {"immediate": ImmediatePolicy,
+                             "hysteresis": HysteresisPolicy,
+                             "cooldown": CooldownPolicy}
+
+
+def get_policy(spec: Union[str, RepartitionPolicy],
+               **overrides) -> RepartitionPolicy:
+    """Resolve ``"cooldown(cooldown_s=5.0)"``-style specs (or pass through)."""
+    if isinstance(spec, RepartitionPolicy):
+        return spec
+    name, kwargs = parse_spec(spec)
+    kwargs.update(overrides)
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; available: "
+                       f"{sorted(POLICIES)}") from None
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
 class NeukonfigController:
     def __init__(self, mgr: PipelineManager, profile: ModelProfile,
-                 trace: BandwidthTrace, *, strategy: str = "switch_b2",
-                 min_gain: float = 0.0, poll_dt: float = 1.0):
+                 trace: BandwidthTrace, *,
+                 strategy: Union[str, SwitchStrategy] = "switch_b2",
+                 policy: Optional[Union[str, RepartitionPolicy]] = None,
+                 min_gain: float = 0.0, poll_dt: float = 1.0,
+                 candidate_splits: Optional[Sequence[int]] = None):
         self.mgr = mgr
         self.profile = profile
         self.monitor = NetworkMonitor(trace)
-        self.strategy = strategy
-        self.min_gain = min_gain
+        self.strategy = mgr.get_strategy(strategy)
+        if policy is None:
+            policy = HysteresisPolicy(min_gain) if min_gain > 0 \
+                else ImmediatePolicy()
+        self.policy = get_policy(policy)
         self.poll_dt = poll_dt
         self.events: List[RepartitionEvent] = []
+        if candidate_splits is None:
+            # the trace's operating points mapped through Eq. 1 — what a
+            # deployment knows up front
+            candidate_splits = sorted({optimal_split(profile, trace.at(t)).split
+                                       for t, _ in trace.steps})
+        self.strategy.prepare(mgr.pool, candidate_splits=candidate_splits)
 
     def step(self, t: float) -> Optional[RepartitionEvent]:
         """Poll the network at virtual time t; repartition if needed."""
@@ -43,12 +146,15 @@ class NeukonfigController:
         if net is None:
             return None
         self.mgr.set_network(net)
-        do, best = should_repartition(self.profile, self.mgr.active.split,
-                                      net, self.min_gain)
-        ev = RepartitionEvent(t, net.bandwidth_mbps, self.mgr.active.split,
-                              best.split, None)
+        self.strategy.observe(self.mgr.pool, net=net, profile=self.profile)
+        current = self.mgr.active.split
+        best = optimal_split(self.profile, net)
+        do = self.policy.should_switch(t, current_split=current, best=best,
+                                       profile=self.profile, net=net)
+        ev = RepartitionEvent(t, net.bandwidth_mbps, current, best.split, None)
         if do:
-            ev.report = self.mgr.repartition(self.strategy, best.split)
+            ev.report = self.strategy.switch(self.mgr.pool, best.split)
+            self.policy.notify_switched(t)
         self.events.append(ev)
         return ev
 

@@ -52,11 +52,14 @@ def optimal_split(profile: ModelProfile, net: NetworkModel,
 
 
 def should_repartition(profile: ModelProfile, current_split: int,
-                       net: NetworkModel, min_gain: float = 0.0
+                       net: NetworkModel, min_gain: float = 0.0,
+                       *, best: Optional[SplitDecision] = None
                        ) -> Tuple[bool, SplitDecision]:
     """The paper repartitions whenever the optimum moved; ``min_gain`` > 0 is
-    the beyond-paper hysteresis knob (relative latency gain required)."""
-    best = optimal_split(profile, net)
+    the beyond-paper hysteresis knob (relative latency gain required).
+    Pass ``best`` to reuse an already-computed optimum."""
+    if best is None:
+        best = optimal_split(profile, net)
     if best.split == current_split:
         return False, best
     cur = profile.total_latency(current_split, net)

@@ -104,6 +104,12 @@ class EdgeCloudPipeline:
     def ready(self) -> bool:
         return self.edge_fn is not None
 
+    def close(self) -> None:
+        """Drop compiled stages + weight references (pool eviction)."""
+        self.edge_fn = None
+        self.cloud_fn = None
+        self.params = None
+
     # -- serve ------------------------------------------------------------
     def process(self, inputs, *, batch: int = 1, seq: Optional[int] = None
                 ) -> tuple[Any, RequestTiming]:

@@ -1,0 +1,245 @@
+"""PipelinePool: the shared substrate all switching strategies operate on.
+
+The pool owns every built ``EdgeCloudPipeline``, keyed by
+``(split, owns_weights)``:
+
+* ``owns_weights=False`` entries share the runner's weight buffers (the
+  paper's "same container" / Case-2 configurations, 1x memory) and reuse
+  the runner's jit cache for warm builds;
+* ``owns_weights=True`` entries hold a second weight copy (Case-1 standby
+  / "new container", +1x memory each) and are charged against the pool's
+  ``mem_budget_bytes``.
+
+Exactly one entry is *active* (serving); any number of others are kept
+warm.  When the charged bytes of non-active entries exceed the budget the
+pool evicts least-recently-used entries (the active pipeline is never
+evicted; a designated Scenario-A standby is evicted last).  Strategies
+never construct pipelines directly — they call ``ensure`` / ``activate``
+/ ``release`` so that memory accounting (paper Table I) stays in one
+place.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.core.network import NetworkModel
+from repro.core.pipeline import BuildReport, EdgeCloudPipeline
+from repro.core.stages import StageRunner
+
+PoolKey = Tuple[int, bool]            # (split, owns_weights)
+
+
+@dataclass
+class PoolEntry:
+    key: PoolKey
+    pipeline: EdgeCloudPipeline
+    report: Optional[BuildReport]
+    last_used: int = 0
+
+    @property
+    def split(self) -> int:
+        return self.key[0]
+
+    @property
+    def owns_weights(self) -> bool:
+        return self.key[1]
+
+    @property
+    def charged_bytes(self) -> int:
+        """Bytes this entry adds beyond the shared runner weights."""
+        return self.pipeline.live_param_bytes() if self.owns_weights else 0
+
+
+class PipelinePool:
+    """Owns N built pipelines plus the checkpoint Pause-and-Resume reloads."""
+
+    def __init__(self, runner: StageRunner, net: NetworkModel, sample_inputs,
+                 *, checkpoint_path: Optional[str] = None,
+                 mem_budget_bytes: Optional[int] = None,
+                 standby_owns_weights: bool = True,
+                 max_entries: int = 16):
+        self.runner = runner
+        self.net = net
+        self.sample_inputs = sample_inputs
+        self.mem_budget_bytes = mem_budget_bytes
+        self.standby_owns_weights = standby_owns_weights
+        self.max_entries = max_entries
+        self._entries: Dict[PoolKey, PoolEntry] = {}
+        self._clock = 0
+        self.active_key: Optional[PoolKey] = None
+        self.standby_key: Optional[PoolKey] = None
+        self._checkpoint_path = checkpoint_path
+
+    @property
+    def checkpoint_path(self) -> str:
+        """Checkpoint Pause-and-Resume reloads from; written lazily so the
+        many pools a benchmark sweep builds don't each serialize the model."""
+        if self._checkpoint_path is None:
+            fd, path = tempfile.mkstemp(suffix=".npz")
+            os.close(fd)
+            from repro.checkpoint import save_pytree
+            save_pytree(self.runner.params, path)
+            self._checkpoint_path = path
+        return self._checkpoint_path
+
+    # -- bookkeeping -------------------------------------------------------
+    def __contains__(self, key: PoolKey) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys(self) -> Iterator[PoolKey]:
+        return iter(list(self._entries))
+
+    def has(self, split: int, owns_weights: bool = False) -> bool:
+        e = self._entries.get((split, owns_weights))
+        return e is not None and e.pipeline.ready
+
+    def get(self, key: PoolKey) -> Optional[PoolEntry]:
+        return self._entries.get(key)
+
+    def _touch(self, entry: PoolEntry) -> None:
+        self._clock += 1
+        entry.last_used = self._clock
+
+    @property
+    def active(self) -> Optional[EdgeCloudPipeline]:
+        e = self._entries.get(self.active_key) if self.active_key else None
+        return e.pipeline if e else None
+
+    @property
+    def standby(self) -> Optional[EdgeCloudPipeline]:
+        e = self._entries.get(self.standby_key) if self.standby_key else None
+        return e.pipeline if e else None
+
+    def set_network(self, net: NetworkModel) -> None:
+        self.net = net
+        for e in self._entries.values():
+            e.pipeline.net = net
+
+    # -- build / reuse -----------------------------------------------------
+    def ensure(self, split: int, *, owns_weights: bool = False,
+               cold: bool = False, reload_from: Optional[str] = None,
+               reuse: bool = True) -> Tuple[PoolEntry, bool]:
+        """Return a ready pipeline for ``(split, owns_weights)``.
+
+        ``reuse=True`` returns a cached entry when present (warm hit,
+        zero build cost — what ``switch_pool`` exploits); ``reuse=False``
+        rebuilds even if cached, which is what the paper's B strategies
+        mean by t_init / t_exec.  Returns ``(entry, cache_hit)``.
+        """
+        key = (split, owns_weights)
+        if reuse:
+            cached = self._entries.get(key)
+            if cached is not None and cached.pipeline.ready:
+                self._touch(cached)
+                return cached, True
+        pipe = EdgeCloudPipeline(self.runner, split, self.net,
+                                 owns_weights=owns_weights)
+        report = pipe.build(self.sample_inputs, cold=cold,
+                            reload_from=reload_from)
+        replaced = self._entries.get(key)
+        if replaced is not None and replaced.pipeline is not self.active:
+            replaced.pipeline.close()
+        entry = PoolEntry(key, pipe, report)
+        self._entries[key] = entry
+        self._touch(entry)
+        # never evict the entry we were asked for — callers may be about to
+        # activate it; speculative builders re-run evict_to_budget() themselves
+        self.evict_to_budget(keep=key)
+        self._evict_over_capacity(keep=key)
+        return entry, False
+
+    def build_standby(self, split: int,
+                      owns_weights: Optional[bool] = None) -> float:
+        """(Re)build the Scenario-A standby; returns wall-clock build time."""
+        ow = self.standby_owns_weights if owns_weights is None else owns_weights
+        t0 = time.perf_counter()
+        entry, _ = self.ensure(split, owns_weights=ow, cold=ow, reuse=False)
+        self.standby_key = entry.key
+        return time.perf_counter() - t0
+
+    # -- activation / teardown ---------------------------------------------
+    def activate(self, key: PoolKey) -> float:
+        """Atomic pointer swap to an already-built pipeline; returns t_switch."""
+        entry = self._entries[key]
+        assert entry.pipeline.ready, f"pipeline {key} not built"
+        t0 = time.perf_counter()
+        self.active_key = key
+        t_switch = time.perf_counter() - t0
+        if self.standby_key == key:
+            self.standby_key = None
+        self._touch(entry)
+        return t_switch
+
+    def pause(self) -> Optional[PoolKey]:
+        """Stop serving (Pause-and-Resume step ii); returns the old key."""
+        old, self.active_key = self.active_key, None
+        return old
+
+    def release(self, key: PoolKey) -> None:
+        if key == self.active_key:
+            raise ValueError("cannot release the active pipeline")
+        entry = self._entries.pop(key, None)
+        if entry is None:
+            return
+        if self.standby_key == key:
+            self.standby_key = None
+        entry.pipeline.close()
+
+    # -- memory accounting (Table I) ---------------------------------------
+    def additional_bytes(self) -> int:
+        return sum(e.charged_bytes for k, e in self._entries.items()
+                   if k != self.active_key)
+
+    def evict_to_budget(self, keep: Optional[PoolKey] = None
+                        ) -> List[PoolKey]:
+        """Drop LRU non-active entries until charged bytes fit the budget.
+
+        ``keep`` protects one key (a just-built entry a caller is about to
+        activate); it may leave the pool transiently over budget.
+        """
+        if self.mem_budget_bytes is None:
+            return []
+        evicted: List[PoolKey] = []
+        while self.additional_bytes() > self.mem_budget_bytes:
+            victims = sorted(
+                (e for k, e in self._entries.items()
+                 if k != self.active_key and k != keep
+                 and e.charged_bytes > 0),
+                key=lambda e: (e.key == self.standby_key, e.last_used))
+            if not victims:
+                if keep is None:
+                    warnings.warn("pipeline pool over memory budget but "
+                                  "nothing evictable", RuntimeWarning)
+                break
+            self.release(victims[0].key)
+            evicted.append(victims[0].key)
+        return evicted
+
+    def _evict_over_capacity(self, keep: Optional[PoolKey] = None) -> None:
+        """Bound the entry count: even 0-charged (shared-weight) entries hold
+        compiled executables, so a long-running deployment visiting many
+        splits must not grow the pool without limit."""
+        if self.max_entries is None:
+            return
+        while len(self._entries) > self.max_entries:
+            victims = sorted(
+                (e for k, e in self._entries.items()
+                 if k not in (self.active_key, self.standby_key, keep)),
+                key=lambda e: e.last_used)
+            if not victims:
+                break
+            self.release(victims[0].key)
+
+    def memory_report(self) -> Dict[str, int]:
+        base = self.active.live_param_bytes() if self.active else 0
+        extra = self.additional_bytes()
+        return {"initial_bytes": base, "additional_bytes": extra,
+                "total_bytes": base + extra}

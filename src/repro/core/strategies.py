@@ -1,0 +1,405 @@
+"""SwitchStrategy registry: the paper's scenarios as a pluggable space.
+
+A strategy is a class registered under a name::
+
+    @register_strategy("my_strategy")
+    class MyStrategy(SwitchStrategy):
+        def switch(self, pool, new_split) -> SwitchReport: ...
+
+and resolved by spec string — either a bare name (``"switch_b2"``) or a
+parameterised form (``"switch_pool(k=2)"``).  Controllers, benchmarks and
+examples iterate ``available_strategies()`` / ``benchmark_specs()``, so a
+new strategy needs no edits anywhere else.
+
+Strategy -> paper mechanism (all operate against a PipelinePool):
+
+``pause_resume``  (baseline, Eq. 2: t_downtime = t_update)
+    Pause serving, cold-rebuild from the checkpoint, resume.  Full outage.
+
+``switch_a``  (Scenario A, Eq. 3: t_downtime = t_switch)
+    Swap to the always-running standby; rebuild a standby for the old
+    configuration in the background.
+
+``switch_b1``  (Scenario B Case 1, Eq. 4: t_downtime = t_init + t_switch)
+    Cold build of a new container (own weights) while the old pipeline
+    keeps serving, then redirect.
+
+``switch_b2``  (Scenario B Case 2, Eq. 5: t_downtime = t_exec + t_switch)
+    Warm build inside the existing container (shared weights, jit cache).
+
+``switch_pool``  (beyond-paper: tunable memory/downtime trade-off)
+    Keep the top-k splits predicted from the recent bandwidth trend
+    pre-built in the pool.  A predicted switch is a pointer swap
+    (Scenario-A downtime at (1+k)x memory); a miss falls back to the
+    B-Case-2 warm build.  k=0 degenerates to B2, k=1 to A Case 1.
+"""
+from __future__ import annotations
+
+import ast
+import collections
+import re
+import time
+import warnings
+from dataclasses import dataclass
+from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.network import NetworkModel
+from repro.core.partitioner import optimal_split
+from repro.core.pipeline import BuildReport
+from repro.core.pool import PipelinePool
+
+
+@dataclass
+class SwitchReport:
+    strategy: str
+    old_split: int
+    new_split: int
+    downtime: float               # the paper's t_downtime for this strategy
+    t_build: float = 0.0          # t_update / t_init / t_exec component
+    t_switch: float = 0.0
+    full_outage: bool = False     # True only for pause_resume
+    background_cost: float = 0.0  # e.g. standby rebuild after switch_a
+    build_detail: Optional[BuildReport] = None
+    cache_hit: bool = False       # switch landed on a pre-built pipeline
+    note: str = ""                # surfaced anomalies (e.g. standby mismatch)
+
+
+class StandbySplitMismatch(UserWarning):
+    """Scenario A was asked for a split its standby was not built for."""
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, type] = {}
+
+_SPEC_RE = re.compile(r"^\s*([A-Za-z_]\w*)\s*(?:\((.*)\))?\s*$")
+
+
+def register_strategy(name: str, *, override: bool = False):
+    """Class decorator adding a SwitchStrategy to the registry."""
+    def deco(cls):
+        if name in _REGISTRY and not override:
+            raise ValueError(f"strategy {name!r} already registered "
+                             f"(pass override=True to replace)")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def unregister_strategy(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def strategy_class(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; registered: "
+                       f"{available_strategies()}") from None
+
+
+def parse_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
+    """``"switch_pool(k=2)"`` -> ``("switch_pool", {"k": 2})``.
+
+    Args are parsed as Python keyword literals, so compound values work
+    too: ``"my_strat(splits=(1, 2), label='a,b')"``.
+    """
+    m = _SPEC_RE.match(spec)
+    if not m:
+        raise ValueError(f"malformed strategy spec {spec!r}")
+    name, argstr = m.groups()
+    kwargs: Dict[str, Any] = {}
+    if argstr and argstr.strip():
+        try:
+            call = ast.parse(f"_spec({argstr})", mode="eval").body
+        except SyntaxError:
+            raise ValueError(f"malformed strategy args {argstr!r}") from None
+        if call.args or any(kw.arg is None for kw in call.keywords):
+            raise ValueError(f"strategy args must be key=value: {argstr!r}")
+        try:
+            kwargs = {kw.arg: ast.literal_eval(kw.value)
+                      for kw in call.keywords}
+        except ValueError:
+            raise ValueError(f"strategy args must be literals: "
+                             f"{argstr!r}") from None
+    return name, kwargs
+
+
+def get_strategy(spec: Union[str, "SwitchStrategy"],
+                 **overrides) -> "SwitchStrategy":
+    """Resolve a spec string (or pass through an instance)."""
+    if isinstance(spec, SwitchStrategy):
+        return spec
+    name, kwargs = parse_spec(spec)
+    kwargs.update(overrides)
+    return strategy_class(name)(**kwargs)
+
+
+def benchmark_specs() -> List[str]:
+    """Every registered strategy's benchmark variants (deduped, ordered)."""
+    out: List[str] = []
+    for name in available_strategies():
+        for v in _REGISTRY[name].benchmark_variants():
+            if v not in out:
+                out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# base class
+# ---------------------------------------------------------------------------
+
+class SwitchStrategy:
+    """One point in the repartitioning strategy space.
+
+    Lifecycle: ``prepare`` once (pre-position standbys), ``observe`` on
+    every network sample (feed prediction), ``switch`` per repartition.
+    """
+
+    name: ClassVar[str] = "?"
+
+    @property
+    def spec(self) -> str:
+        return self.name
+
+    @classmethod
+    def benchmark_variants(cls) -> Sequence[str]:
+        """Spec strings the benchmark suite should sweep for this strategy."""
+        return (cls.name,)
+
+    def prepare(self, pool: PipelinePool,
+                candidate_splits: Sequence[int] = ()) -> None:
+        """Pre-position pipelines before serving starts (optional)."""
+
+    def observe(self, pool: PipelinePool, net: Optional[NetworkModel] = None,
+                profile=None) -> None:
+        """Feed a network sample / model profile for prediction (optional)."""
+
+    def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# the paper's four strategies
+# ---------------------------------------------------------------------------
+
+@register_strategy("pause_resume")
+class PauseResumeStrategy(SwitchStrategy):
+    """Baseline: halt, cold-rebuild from storage, resume (full outage)."""
+
+    def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        old_key = pool.active_key
+        old = pool.active.split
+        ckpt = pool.checkpoint_path      # lazy write happens OUTSIDE t_update
+        t0 = time.perf_counter()
+        pool.pause()                                       # (ii) pause
+        try:
+            entry, _ = pool.ensure(new_split, cold=True,   # (iii) update
+                                   reload_from=ckpt,
+                                   reuse=False)
+            pool.activate(entry.key)                       # (iv) resume
+        finally:
+            # a failed rebuild must not strand the service in permanent
+            # outage: fall back to the previous pipeline
+            if pool.active is None and old_key is not None and old_key in pool:
+                pool.activate(old_key)
+        dt = time.perf_counter() - t0
+        return SwitchReport("pause_resume", old, new_split, downtime=dt,
+                            t_build=entry.report.total, full_outage=True,
+                            build_detail=entry.report)
+
+
+@register_strategy("switch_a")
+class ScenarioAStrategy(SwitchStrategy):
+    """Always-running standby; switching is an atomic pointer swap."""
+
+    def __init__(self, owns_weights: Optional[bool] = None):
+        self.owns_weights = owns_weights   # None -> pool default
+
+    def prepare(self, pool: PipelinePool,
+                candidate_splits: Sequence[int] = ()) -> None:
+        active_split = pool.active.split if pool.active is not None else None
+        for s in candidate_splits:
+            if s != active_split:
+                pool.build_standby(s, owns_weights=self.owns_weights)
+                return
+
+    def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        standby = pool.standby
+        if standby is None or not standby.ready:
+            raise RuntimeError(
+                "Scenario A requires the always-running standby pipeline")
+        old = pool.active.split
+        note = ""
+        if standby.split != new_split:
+            # Scenario A can only jump to the configuration it pre-built;
+            # surface the mismatch instead of silently rewriting the target.
+            note = (f"standby built for split {standby.split}, requested "
+                    f"{new_split}; switching to the standby")
+            warnings.warn(note, StandbySplitMismatch)
+            new_split = standby.split
+        t_switch = pool.activate(pool.standby_key)         # atomic swap
+        # background: rebuild the redundant pipeline for the *old* config
+        bg = pool.build_standby(old, owns_weights=self.owns_weights)
+        return SwitchReport("switch_a", old, new_split, downtime=t_switch,
+                            t_switch=t_switch, background_cost=bg,
+                            cache_hit=True, note=note)
+
+
+@register_strategy("switch_b1")
+class ScenarioB1Strategy(SwitchStrategy):
+    """Cold build of a new container while the old one serves, then redirect."""
+
+    def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        old_key = pool.active_key
+        old = pool.active.split
+        t0 = time.perf_counter()
+        entry, _ = pool.ensure(new_split, owns_weights=True, cold=True,
+                               reuse=False)                # new container
+        t_build = time.perf_counter() - t0
+        t_switch = pool.activate(entry.key)                # redirect
+        if old_key is not None and old_key != entry.key:
+            pool.release(old_key)                          # reap old container
+        return SwitchReport("switch_b1", old, new_split,
+                            downtime=t_build + t_switch, t_build=t_build,
+                            t_switch=t_switch, build_detail=entry.report)
+
+
+@register_strategy("switch_b2")
+class ScenarioB2Strategy(SwitchStrategy):
+    """Warm build inside the existing container (jit cache, shared weights)."""
+
+    def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        old = pool.active.split
+        t0 = time.perf_counter()
+        entry, _ = pool.ensure(new_split, owns_weights=False, cold=False,
+                               reuse=False)                # same container
+        t_build = time.perf_counter() - t0
+        t_switch = pool.activate(entry.key)
+        return SwitchReport("switch_b2", old, new_split,
+                            downtime=t_build + t_switch, t_build=t_build,
+                            t_switch=t_switch, build_detail=entry.report)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: speculative pre-building, k pipelines deep
+# ---------------------------------------------------------------------------
+
+@register_strategy("switch_pool")
+class SwitchPoolStrategy(SwitchStrategy):
+    """Keep the top-k predicted splits pre-built: A's downtime when the
+    prediction hits, B2's when it misses, at (1+k)x memory.
+
+    Prediction uses the bandwidth trend (linear extrapolation plus recent
+    levels mapped through the Eq.-1 optimiser) when a profile is available,
+    falling back to the recently-active splits otherwise.
+    """
+
+    def __init__(self, k: int = 1, owns_weights: bool = True,
+                 history: int = 8):
+        self.k = int(k)
+        self.owns_weights = bool(owns_weights)
+        self._bw_hist: collections.deque = collections.deque(maxlen=history)
+        self._split_hist: collections.deque = collections.deque(maxlen=history)
+        self._profile = None
+
+    @property
+    def spec(self) -> str:
+        return f"switch_pool(k={self.k})"
+
+    @classmethod
+    def benchmark_variants(cls) -> Sequence[str]:
+        return ("switch_pool(k=0)", "switch_pool(k=1)", "switch_pool(k=2)")
+
+    def prepare(self, pool: PipelinePool,
+                candidate_splits: Sequence[int] = ()) -> None:
+        """Seed the predictor with the deployment's known operating points
+        and pre-build the top-k of them (the Scenario-A warm start)."""
+        for s in candidate_splits:
+            if s not in self._split_hist:
+                self._split_hist.append(s)
+        self._speculate(pool)
+
+    def observe(self, pool: PipelinePool, net: Optional[NetworkModel] = None,
+                profile=None) -> None:
+        if profile is not None:
+            self._profile = profile
+        if net is not None:
+            self._bw_hist.append(net.bandwidth_mbps)
+
+    def predicted_splits(self, pool: PipelinePool) -> List[int]:
+        """Top-k candidate splits, most likely first."""
+        cur = pool.active.split if pool.active is not None else None
+        cands: List[int] = []
+
+        def add(s):
+            if s is not None and s != cur and s not in cands:
+                cands.append(s)
+
+        if self._profile is not None and self._bw_hist:
+            bws = list(self._bw_hist)
+            guesses = []
+            if len(bws) >= 2:                     # linear bandwidth trend
+                guesses.append(max(0.1, 2.0 * bws[-1] - bws[-2]))
+            guesses.extend(reversed(bws))         # recent levels, newest first
+            for bw in guesses:
+                add(optimal_split(self._profile, NetworkModel(bw)).split)
+        for s in reversed(self._split_hist):      # recently-served splits
+            add(s)
+        return cands[:self.k]
+
+    def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        old = pool.active.split
+        if pool.net is not None:
+            bw = pool.net.bandwidth_mbps
+            # observe() may already have recorded this sample; a duplicate
+            # would flatten the linear-trend extrapolation
+            if not self._bw_hist or self._bw_hist[-1] != bw:
+                self._bw_hist.append(bw)
+        key = (new_split, self.owns_weights)
+        hit = pool.has(new_split, self.owns_weights)
+        if hit:                                   # predicted: pointer swap
+            t_switch = pool.activate(key)
+            t_build, detail = 0.0, None
+            downtime = t_switch
+        else:                                     # miss: B2-style warm build
+            t0 = time.perf_counter()
+            entry, _ = pool.ensure(new_split, owns_weights=False, cold=False,
+                                   reuse=False)
+            t_build = time.perf_counter() - t0
+            t_switch = pool.activate(entry.key)
+            detail = entry.report
+            downtime = t_build + t_switch
+        self._split_hist.append(old)
+        bg = self._speculate(pool)
+        return SwitchReport(self.spec, old, new_split, downtime=downtime,
+                            t_build=t_build, t_switch=t_switch,
+                            background_cost=bg, build_detail=detail,
+                            cache_hit=hit)
+
+    def _speculate(self, pool: PipelinePool) -> float:
+        """Background: pre-build predictions, drop stale speculation."""
+        want = self.predicted_splits(pool)
+        for key in pool.keys():
+            split, owned = key
+            if owned and key != pool.active_key and key != pool.standby_key \
+                    and split not in want:
+                pool.release(key)
+        t = 0.0
+        for s in want:
+            if pool.has(s, self.owns_weights):
+                continue
+            t0 = time.perf_counter()
+            pool.ensure(s, owns_weights=self.owns_weights,
+                        cold=self.owns_weights, reuse=True)
+            t += time.perf_counter() - t0
+        # speculation is best-effort: enforce the budget on what we built
+        pool.evict_to_budget()
+        return t

@@ -1,174 +1,118 @@
-"""Repartitioning strategies (the heart of the paper, section III).
+"""PipelineManager: thin facade over the PipelinePool + strategy registry.
 
-Strategy -> paper mechanism -> JAX mechanism:
+The paper's repartitioning mechanisms live in ``repro.core.strategies``
+as self-contained ``SwitchStrategy`` classes resolved by name through a
+registry (``@register_strategy``), and every built pipeline is owned by
+the ``repro.core.pool.PipelinePool`` (keyed by ``(split, owns_weights)``,
+LRU-evicted under an edge-memory budget).  This module keeps the seed's
+entry point stable::
 
-``pause_resume``  (baseline, Eq. 2: t_downtime = t_update)
-    Serving halts; the app "resumes with new metadata", which forces it to
-    reload its model from storage and rebuild both stages cold.  Nothing is
-    served during the window (full outage).
+    mgr = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                          sample_inputs=inputs, standby_split=2)
+    report = mgr.repartition("switch_a", 2)          # registry name
+    report = mgr.repartition("switch_pool(k=2)", 2)  # parameterised spec
 
-``switch_a``  (Scenario A, Eq. 3: t_downtime = t_switch)
-    A standby pipeline for the alternate partitioning is ALWAYS built.
-    Switching is an atomic pointer swap.  Case 1: standby owns a second
-    weight copy (2x memory).  Case 2: standby shares the donor weight
-    buffers (1x memory).  After the swap a new standby is rebuilt in the
-    background (not part of downtime, reported separately).
-
-``switch_b1``  (Scenario B Case 1, Eq. 4: t_downtime = t_init + t_switch)
-    Cold build of a NEW pipeline (fresh closures => retrace+recompile, own
-    weight placement = container image load) while the old pipeline keeps
-    serving (degraded).  Then swap.
-
-``switch_b2``  (Scenario B Case 2, Eq. 5: t_downtime = t_exec + t_switch)
-    Warm build INSIDE the existing container: reuse the runner's jit cache
-    and the donor weight buffers; only stage rebind/compile executes.
-
-All strategies return a SwitchReport; the ServingSimulator (downtime.py)
-replays these windows against a frame stream to produce Figs. 11-15.
+``repartition`` accepts any registered spec string (or a strategy
+instance) and caches one instance per spec so stateful strategies (e.g.
+``switch_pool``'s bandwidth history) persist across switches.  See
+``strategies.py`` for the strategy -> paper-equation mapping and
+``available_strategies()`` for the live registry.
 """
 from __future__ import annotations
 
-import os
-import tempfile
-import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
-
-import jax
+from typing import Dict, Optional, Union
 
 from repro.core.network import NetworkModel
-from repro.core.pipeline import BuildReport, EdgeCloudPipeline
+from repro.core.pool import PipelinePool, PoolEntry, PoolKey
 from repro.core.stages import StageRunner
-
-
-@dataclass
-class SwitchReport:
-    strategy: str
-    old_split: int
-    new_split: int
-    downtime: float               # the paper's t_downtime for this strategy
-    t_build: float = 0.0          # t_update / t_init / t_exec component
-    t_switch: float = 0.0
-    full_outage: bool = False     # True only for pause_resume
-    background_cost: float = 0.0  # e.g. standby rebuild after switch_a
-    build_detail: Optional[BuildReport] = None
+from repro.core.strategies import (SwitchReport, SwitchStrategy,
+                                   available_strategies, get_strategy)
 
 
 class PipelineManager:
-    """Owns the active (and optional standby) pipeline plus the checkpoint
-    that the Pause-and-Resume baseline reloads from."""
+    """Back-compat facade: owns a PipelinePool and dispatches strategies."""
 
     def __init__(self, runner: StageRunner, split: int, net: NetworkModel,
                  sample_inputs, *, checkpoint_path: Optional[str] = None,
                  standby_split: Optional[int] = None,
-                 standby_owns_weights: bool = True):
-        self.runner = runner
-        self.net = net
-        self.sample_inputs = sample_inputs
-        self.active = EdgeCloudPipeline(runner, split, net)
-        self.active.build(sample_inputs, cold=False)
-        self.standby: Optional[EdgeCloudPipeline] = None
-        self.standby_owns_weights = standby_owns_weights
-        if checkpoint_path is None:
-            fd, checkpoint_path = tempfile.mkstemp(suffix=".npz")
-            os.close(fd)
-            from repro.checkpoint import save_pytree
-            save_pytree(runner.params, checkpoint_path)
-        self.checkpoint_path = checkpoint_path
+                 standby_owns_weights: bool = True,
+                 mem_budget_bytes: Optional[int] = None):
+        self.pool = PipelinePool(runner, net, sample_inputs,
+                                 checkpoint_path=checkpoint_path,
+                                 mem_budget_bytes=mem_budget_bytes,
+                                 standby_owns_weights=standby_owns_weights)
+        entry, _ = self.pool.ensure(split, cold=False)
+        self.pool.activate(entry.key)
+        self._strategies: Dict[str, SwitchStrategy] = {}
         if standby_split is not None:
             self.build_standby(standby_split)
 
-    # -- scenario A standby ------------------------------------------------
-    def build_standby(self, split: int) -> float:
-        t0 = time.perf_counter()
-        self.standby = EdgeCloudPipeline(
-            self.runner, split, self.net,
-            owns_weights=self.standby_owns_weights)
-        self.standby.build(self.sample_inputs, cold=self.standby_owns_weights)
-        return time.perf_counter() - t0
+    # -- delegated state ---------------------------------------------------
+    @property
+    def runner(self) -> StageRunner:
+        return self.pool.runner
 
-    # -- serving entry -------------------------------------------------
+    @property
+    def net(self) -> NetworkModel:
+        return self.pool.net
+
+    @property
+    def sample_inputs(self):
+        return self.pool.sample_inputs
+
+    @property
+    def checkpoint_path(self) -> str:
+        return self.pool.checkpoint_path
+
+    @property
+    def standby_owns_weights(self) -> bool:
+        return self.pool.standby_owns_weights
+
+    @property
+    def active(self):
+        return self.pool.active
+
+    @property
+    def standby(self):
+        return self.pool.standby
+
+    # -- strategy resolution ----------------------------------------------
+    def get_strategy(self, spec: Union[str, SwitchStrategy]) -> SwitchStrategy:
+        """Resolve + cache a strategy instance for this manager."""
+        if isinstance(spec, SwitchStrategy):
+            return spec
+        if spec not in self._strategies:
+            self._strategies[spec] = get_strategy(spec)
+        return self._strategies[spec]
+
+    def repartition(self, strategy: Union[str, SwitchStrategy],
+                    new_split: int) -> SwitchReport:
+        return self.get_strategy(strategy).switch(self.pool, new_split)
+
+    # -- seed-era conveniences ---------------------------------------------
+    def build_standby(self, split: int) -> float:
+        return self.pool.build_standby(split)
+
     def serve(self, inputs):
-        if self.active is None:
+        if self.pool.active is None:
             raise RuntimeError("service outage: pipeline paused")
-        return self.active.process(inputs)
+        return self.pool.active.process(inputs)
 
     def set_network(self, net: NetworkModel):
-        self.net = net
-        if self.active is not None:
-            self.active.net = net
-        if self.standby is not None:
-            self.standby.net = net
+        self.pool.set_network(net)
 
-    # -- strategies ------------------------------------------------------
     def pause_resume(self, new_split: int) -> SwitchReport:
-        old = self.active.split
-        t0 = time.perf_counter()
-        self.active = None                          # (ii) pause
-        pipe = EdgeCloudPipeline(self.runner, new_split, self.net)
-        detail = pipe.build(self.sample_inputs, cold=True,   # (iii) update
-                            reload_from=self.checkpoint_path)
-        self.active = pipe                          # (iv) resume
-        dt = time.perf_counter() - t0
-        return SwitchReport("pause_resume", old, new_split, downtime=dt,
-                            t_build=detail.total, full_outage=True,
-                            build_detail=detail)
+        return self.repartition("pause_resume", new_split)
 
     def switch_a(self, new_split: int) -> SwitchReport:
-        assert self.standby is not None and self.standby.ready, \
-            "Scenario A requires the always-running standby pipeline"
-        old = self.active.split
-        if self.standby.split != new_split:
-            # standby was built for a different operating point; Scenario A
-            # still switches to it (it IS the alternate configuration).
-            new_split = self.standby.split
-        t0 = time.perf_counter()
-        self.active, self.standby = self.standby, None       # atomic swap
-        t_switch = time.perf_counter() - t0
-        # background: rebuild the redundant pipeline for the *old* config
-        bg = self.build_standby(old)
-        return SwitchReport("switch_a", old, new_split, downtime=t_switch,
-                            t_switch=t_switch, background_cost=bg)
+        return self.repartition("switch_a", new_split)
 
     def switch_b1(self, new_split: int) -> SwitchReport:
-        old = self.active.split
-        t0 = time.perf_counter()
-        pipe = EdgeCloudPipeline(self.runner, new_split, self.net,
-                                 owns_weights=True)           # new container
-        detail = pipe.build(self.sample_inputs, cold=True)
-        t_build = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        self.active = pipe                                    # redirect
-        t_switch = time.perf_counter() - t1
-        return SwitchReport("switch_b1", old, new_split,
-                            downtime=t_build + t_switch, t_build=t_build,
-                            t_switch=t_switch, build_detail=detail)
+        return self.repartition("switch_b1", new_split)
 
     def switch_b2(self, new_split: int) -> SwitchReport:
-        old = self.active.split
-        t0 = time.perf_counter()
-        pipe = EdgeCloudPipeline(self.runner, new_split, self.net)
-        detail = pipe.build(self.sample_inputs, cold=False)   # same container
-        t_build = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        self.active = pipe
-        t_switch = time.perf_counter() - t1
-        return SwitchReport("switch_b2", old, new_split,
-                            downtime=t_build + t_switch, t_build=t_build,
-                            t_switch=t_switch, build_detail=detail)
-
-    def repartition(self, strategy: str, new_split: int) -> SwitchReport:
-        return {"pause_resume": self.pause_resume,
-                "switch_a": self.switch_a,
-                "switch_b1": self.switch_b1,
-                "switch_b2": self.switch_b2}[strategy](new_split)
+        return self.repartition("switch_b2", new_split)
 
     # -- Table I memory accounting ----------------------------------------
-    def memory_report(self) -> Dict[str, int]:
-        base = self.active.live_param_bytes() if self.active else 0
-        extra = 0
-        if self.standby is not None and self.standby.ready \
-                and self.standby.owns_weights:
-            extra = self.standby.live_param_bytes()
-        return {"initial_bytes": base, "additional_bytes": extra,
-                "total_bytes": base + extra}
+    def memory_report(self):
+        return self.pool.memory_report()

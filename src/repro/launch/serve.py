@@ -12,8 +12,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (BandwidthTrace, NetworkModel, NeukonfigController,
-                        PipelineManager, StageRunner, optimal_split,
+from repro.core import (BandwidthTrace, NeukonfigController, PipelineManager,
+                        StageRunner, available_strategies, optimal_split,
                         profile_transformer, simulate_window)
 from repro.models import transformer as T
 
@@ -22,8 +22,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--strategy", default="switch_b2",
-                    choices=["pause_resume", "switch_a", "switch_b1",
-                             "switch_b2"])
+                    help="any registered strategy spec, e.g. "
+                         f"'switch_pool(k=2)'; names: {available_strategies()}")
     ap.add_argument("--duration", type=float, default=90.0)
     ap.add_argument("--fps", type=float, default=10.0)
     ap.add_argument("--seq", type=int, default=32)
@@ -40,10 +40,9 @@ def main():
     trace = BandwidthTrace(steps=[(0.0, 20.0), (args.duration / 3, 5.0),
                                   (2 * args.duration / 3, 20.0)])
     split0 = optimal_split(profile, trace.at(0.0)).split
-    standby = optimal_split(profile, NetworkModel(5.0)).split \
-        if args.strategy == "switch_a" else None
     mgr = PipelineManager(runner, split=split0, net=trace.at(0.0),
-                          sample_inputs=inputs, standby_split=standby)
+                          sample_inputs=inputs)
+    # the controller derives candidates from the trace and calls prepare()
     ctl = NeukonfigController(mgr, profile, trace, strategy=args.strategy)
     events = ctl.run(args.duration)
     _, timing = mgr.serve(inputs)

@@ -1,0 +1,88 @@
+"""Minimal stand-in for ``hypothesis`` so property tests still run (with a
+small deterministic sample) when the real package is not installed.
+
+Usage in a test module::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ImportError:
+        from _hypothesis_compat import hypothesis, st
+
+The shim draws the all-min and all-max corner first, then seeded-random
+examples, capped at a handful so a clean CI environment stays fast.  It is
+NOT a shrinker — install ``hypothesis`` (dev extra in pyproject.toml) for
+real property testing.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = 8
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw          # draw(rng, edge) -> value
+
+
+def floats(min_value, max_value, **_kw):
+    def draw(rng, edge):
+        if edge == 0:
+            return float(min_value)
+        if edge == 1:
+            return float(max_value)
+        return float(rng.uniform(min_value, max_value))
+    return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    def draw(rng, edge):
+        if edge == 0:
+            return int(min_value)
+        if edge == 1:
+            return int(max_value)
+        return int(rng.integers(min_value, max_value + 1))
+    return _Strategy(draw)
+
+
+def lists(elements, *, min_size=0, max_size=10):
+    def draw(rng, edge):
+        n = min_size if edge == 0 else int(rng.integers(min_size,
+                                                        max_size + 1))
+        return [elements.draw(rng, 2) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def given(*strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_hc_max_examples", _MAX_EXAMPLES_CAP),
+                _MAX_EXAMPLES_CAP)
+
+        def wrapper():
+            rng = np.random.default_rng(0)
+            for i in range(n):
+                edge = i if i < 2 else 2
+                fn(*[s.draw(rng, edge) for s in strategies])
+
+        # deliberately no functools.wraps: pytest must see a zero-arg
+        # function, not the example parameters (it would inject fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(deadline=None, max_examples=_MAX_EXAMPLES_CAP, **_kw):
+    def deco(fn):
+        fn._hc_max_examples = max_examples
+        return fn
+    return deco
+
+
+st = types.SimpleNamespace(floats=floats, integers=integers, lists=lists)
+hypothesis = types.SimpleNamespace(given=given, settings=settings,
+                                   strategies=st)

@@ -1,8 +1,12 @@
 """Partitioner (Eq. 1) unit + property tests, incl. the paper's Q1 claims."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:              # clean env: deterministic fallback sampler
+    from _hypothesis_compat import hypothesis, st
 
 from repro.configs import get_config
 from repro.core.network import NetworkModel

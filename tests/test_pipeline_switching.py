@@ -3,12 +3,16 @@ downtime semantics (the paper's central claims as invariants)."""
 import dataclasses
 import time
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:              # clean env: deterministic fallback sampler
+    from _hypothesis_compat import hypothesis, st
 
 from repro.configs import get_config
 from repro.core.downtime import simulate_window, sweep_fps

@@ -1,0 +1,327 @@
+"""Strategy registry, PipelinePool, switch_pool, and controller policies."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import (BandwidthTrace, CooldownPolicy, HysteresisPolicy,
+                        ImmediatePolicy, NetworkModel, NeukonfigController,
+                        PipelineManager, PipelinePool, StageRunner, get_policy)
+from repro.core.pipeline import EdgeCloudPipeline
+from repro.core.profiler import ModelProfile, UnitProfile
+from repro.core.strategies import (StandbySplitMismatch, SwitchReport,
+                                   SwitchStrategy, available_strategies,
+                                   benchmark_specs, get_strategy, parse_spec,
+                                   register_strategy, unregister_strategy)
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    runner = StageRunner(cfg, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+    return cfg, runner, {"tokens": toks}
+
+
+def _mgr(runner, inputs, **kw):
+    return PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                           sample_inputs=inputs, **kw)
+
+
+def _param_bytes(runner):
+    return sum(a.size * a.dtype.itemsize
+               for a in jax.tree.leaves(runner.params))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_paper_strategies():
+    assert {"pause_resume", "switch_a", "switch_b1", "switch_b2",
+            "switch_pool"} <= set(available_strategies())
+
+
+def test_registry_unknown_name_errors():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        get_strategy("no_such_strategy")
+
+
+def test_registry_parameterized_spec():
+    s = get_strategy("switch_pool(k=2)")
+    assert s.k == 2 and s.spec == "switch_pool(k=2)"
+    assert parse_spec("switch_pool(k=2, owns_weights=False)") == \
+        ("switch_pool", {"k": 2, "owns_weights": False})
+    with pytest.raises(ValueError, match="key=value"):
+        parse_spec("switch_pool(2)")
+
+
+def test_registry_rejects_duplicates():
+    @register_strategy("_dup_probe")
+    class A(SwitchStrategy):
+        pass
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            @register_strategy("_dup_probe")
+            class B(SwitchStrategy):
+                pass
+
+        @register_strategy("_dup_probe", override=True)
+        class C(SwitchStrategy):
+            pass
+        assert get_strategy("_dup_probe").__class__ is C
+    finally:
+        unregister_strategy("_dup_probe")
+    assert "_dup_probe" not in available_strategies()
+
+
+def test_custom_strategy_plugs_in_without_core_edits(setup):
+    """Extensibility proof: a @register_strategy class is reachable through
+    PipelineManager (and therefore controller/benchmarks) by name alone."""
+    cfg, runner, inputs = setup
+
+    @register_strategy("test_noop")
+    class NoopStrategy(SwitchStrategy):
+        def switch(self, pool, new_split):
+            old = pool.active.split
+            return SwitchReport("test_noop", old, old, downtime=0.0)
+
+    try:
+        assert "test_noop" in available_strategies()
+        assert "test_noop" in benchmark_specs()
+        mgr = _mgr(runner, inputs)
+        rep = mgr.repartition("test_noop", 2)
+        assert rep.strategy == "test_noop" and rep.downtime == 0.0
+    finally:
+        unregister_strategy("test_noop")
+
+
+# ---------------------------------------------------------------------------
+# pipeline pool
+# ---------------------------------------------------------------------------
+
+def test_pool_warm_reuse_and_keying(setup):
+    cfg, runner, inputs = setup
+    pool = PipelinePool(runner, NetworkModel(20.0), inputs)
+    e1, hit1 = pool.ensure(1)
+    pool.activate(e1.key)
+    e2, hit2 = pool.ensure(1)                 # same key -> cache hit
+    assert not hit1 and hit2 and e2 is e1
+    e3, hit3 = pool.ensure(1, owns_weights=True, cold=True)
+    assert not hit3 and e3 is not e1          # distinct key per weight mode
+    assert pool.has(1) and pool.has(1, True)
+
+
+def test_pool_lru_eviction_under_budget(setup):
+    cfg, runner, inputs = setup
+    pbytes = _param_bytes(runner)
+    pool = PipelinePool(runner, NetworkModel(20.0), inputs,
+                        mem_budget_bytes=int(1.5 * pbytes))
+    e, _ = pool.ensure(1)
+    pool.activate(e.key)
+    pool.ensure(2, owns_weights=True, cold=True, reuse=False)
+    assert pool.has(2, True)
+    pool.ensure(0, owns_weights=True, cold=True, reuse=False)
+    # two owned standbys (2x) exceed the 1.5x budget -> LRU (split 2) evicted
+    assert pool.has(0, True) and not pool.has(2, True)
+    assert pool.additional_bytes() <= int(1.5 * pbytes)
+    # the active pipeline is never evictable
+    with pytest.raises(ValueError):
+        pool.release(pool.active_key)
+
+
+def test_pool_shared_weight_entries_are_free(setup):
+    cfg, runner, inputs = setup
+    pool = PipelinePool(runner, NetworkModel(20.0), inputs,
+                        mem_budget_bytes=0)
+    e, _ = pool.ensure(1)
+    pool.activate(e.key)
+    pool.ensure(2)                            # shares donor weights: 0 bytes
+    assert pool.has(2) and pool.additional_bytes() == 0
+
+
+# ---------------------------------------------------------------------------
+# bugfixes: pause_resume outage + switch_a mismatch surfacing
+# ---------------------------------------------------------------------------
+
+def test_pause_resume_failure_restores_service(setup, monkeypatch):
+    """A failed cold rebuild must not leave the service down forever."""
+    cfg, runner, inputs = setup
+    mgr = _mgr(runner, inputs)
+    ref, _ = mgr.serve(inputs)
+    def broken_build(*a, **kw):
+        raise RuntimeError("model storage unreachable")
+
+    monkeypatch.setattr(EdgeCloudPipeline, "build", broken_build)
+    with pytest.raises(RuntimeError, match="storage unreachable"):
+        mgr.repartition("pause_resume", 2)
+    out, _ = mgr.serve(inputs)                # old pipeline restored
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+    assert mgr.active.split == 1
+
+
+def test_switch_a_surfaces_standby_mismatch(setup):
+    cfg, runner, inputs = setup
+    mgr = _mgr(runner, inputs, standby_split=2)
+    with pytest.warns(StandbySplitMismatch, match="standby built for split 2"):
+        rep = mgr.repartition("switch_a", 0)  # standby was built for 2
+    assert rep.new_split == 2 and rep.note    # switched to what exists
+    assert mgr.active.split == 2
+
+
+# ---------------------------------------------------------------------------
+# switch_pool: k=0 == B2, k=1 == A, memory scales with k
+# ---------------------------------------------------------------------------
+
+def test_switch_pool_k1_equivalent_to_scenario_a(setup):
+    cfg, runner, inputs = setup
+    mgr = _mgr(runner, inputs)
+    reps = [mgr.repartition("switch_pool(k=1)", s) for s in (2, 1, 2, 1)]
+    assert not reps[0].cache_hit and reps[0].t_build > 0   # first: cold miss
+    for rep in reps[1:]:                      # steady: pure pointer swap
+        assert rep.cache_hit and rep.t_build == 0
+        assert rep.downtime < reps[0].downtime
+        assert not rep.full_outage
+    mem = mgr.memory_report()                 # A Case 1 memory: 2x
+    assert mem["additional_bytes"] == pytest.approx(mem["initial_bytes"],
+                                                    rel=0.01)
+    out, _ = mgr.serve(inputs)                # service alive on the standby
+    assert out.shape[-1] == cfg.vocab_size
+
+
+def test_switch_pool_k0_equivalent_to_b2(setup):
+    cfg, runner, inputs = setup
+    mgr = _mgr(runner, inputs)
+    reps = [mgr.repartition("switch_pool(k=0)", s) for s in (2, 1, 2)]
+    for rep in reps:                          # always the warm-build path
+        assert not rep.cache_hit and rep.t_build > 0
+        assert not rep.full_outage
+    assert mgr.memory_report()["additional_bytes"] == 0   # B2 memory: 1x
+    rep_b2 = mgr.repartition("switch_b2", 1)
+    assert rep_b2.t_build > 0                 # same mechanism as B2
+
+
+def test_strategies_survive_zero_budget(setup):
+    """A budget must never evict the pipeline a strategy is activating:
+    owned-weight builds (B1, standby) still switch, just without retention."""
+    cfg, runner, inputs = setup
+    mgr = _mgr(runner, inputs, mem_budget_bytes=0)
+    rep = mgr.repartition("switch_b1", 2)     # owned build, activated at once
+    assert mgr.active.split == 2 and not rep.full_outage
+    mgr.build_standby(1)                      # over budget but usable now
+    assert mgr.standby is not None and mgr.standby.ready
+    rep = mgr.repartition("switch_a", 1)
+    assert mgr.active.split == 1 and rep.downtime < 0.05
+    out, _ = mgr.serve(inputs)
+    assert out.shape[-1] == cfg.vocab_size
+
+
+def test_switch_pool_respects_memory_budget(setup):
+    """Budget 0 -> speculation evicted immediately -> behaves like k=0."""
+    cfg, runner, inputs = setup
+    mgr = _mgr(runner, inputs, mem_budget_bytes=0)
+    reps = [mgr.repartition("switch_pool(k=1)", s) for s in (2, 1, 2)]
+    assert all(not r.cache_hit for r in reps)
+    assert mgr.memory_report()["additional_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# controller policies
+# ---------------------------------------------------------------------------
+
+def _toy_profile():
+    """Optimum flips between split 1 (20 Mbps) and split 3 (0.5 Mbps)."""
+    units = [UnitProfile("embed", 0, 0, 400_000)]
+    units += [UnitProfile(f"l{i}", 0.05, 0.001, b)
+              for i, b in enumerate([200_000, 100_000, 50_000])]
+    units += [UnitProfile("head", 0.05, 0.001, 0)]
+    return ModelProfile("toy", units)
+
+
+def test_policy_objects_decide_on_gain():
+    profile = _toy_profile()
+    net = NetworkModel(0.5)
+    from repro.core.partitioner import optimal_split
+    best = optimal_split(profile, net)
+    assert best.split != 1
+    cur = profile.total_latency(1, net)
+    gain = (cur - best.total) / cur
+    kw = dict(current_split=1, best=best, profile=profile, net=net)
+    assert ImmediatePolicy().should_switch(0.0, **kw)
+    assert HysteresisPolicy(min_gain=gain / 2).should_switch(0.0, **kw)
+    assert not HysteresisPolicy(min_gain=gain * 2).should_switch(0.0, **kw)
+    cd = CooldownPolicy(cooldown_s=10.0)
+    assert cd.should_switch(0.0, **kw)
+    cd.notify_switched(0.0)
+    assert not cd.should_switch(5.0, **kw)
+    assert cd.should_switch(10.0, **kw)
+    # no-op when the optimum did not move
+    kw["current_split"] = best.split
+    assert not ImmediatePolicy().should_switch(0.0, **kw)
+
+
+def test_policy_spec_resolution():
+    p = get_policy("cooldown(cooldown_s=3.0)")
+    assert isinstance(p, CooldownPolicy) and p.cooldown_s == 3.0
+    assert isinstance(get_policy("immediate"), ImmediatePolicy)
+    with pytest.raises(KeyError, match="unknown policy"):
+        get_policy("nope")
+
+
+def test_controller_cooldown_rate_limits_flapping(setup):
+    cfg, runner, inputs = setup
+    flappy = BandwidthTrace(steps=[(0, 20.0)] + [(i, 0.5 if i % 2 else 20.0)
+                                                 for i in range(1, 12)])
+    mgr_i = _mgr(runner, inputs)
+    ctl_i = NeukonfigController(mgr_i, _toy_profile(), flappy,
+                                strategy="switch_b2", policy="immediate")
+    n_imm = sum(1 for e in ctl_i.run(11.0) if e.report)
+    mgr_c = _mgr(runner, inputs)
+    ctl_c = NeukonfigController(mgr_c, _toy_profile(), flappy,
+                                strategy="switch_b2",
+                                policy=CooldownPolicy(cooldown_s=6.0))
+    n_cd = sum(1 for e in ctl_c.run(11.0) if e.report)
+    assert n_imm > n_cd >= 1
+
+
+def test_controller_hysteresis_suppresses_marginal_gain(setup):
+    cfg, runner, inputs = setup
+    trace = BandwidthTrace(steps=[(0.0, 20.0), (3.0, 0.5)])
+    mgr = _mgr(runner, inputs)
+    ctl = NeukonfigController(mgr, _toy_profile(), trace,
+                              strategy="switch_b2",
+                              policy=HysteresisPolicy(min_gain=2.0))
+    assert all(e.report is None for e in ctl.run(8.0))
+    assert mgr.active.split == 1              # never switched
+
+
+def test_controller_auto_prepares_strategy(setup):
+    """The controller owns the prepare() lifecycle: switch_a works without a
+    manually-built standby, pre-positioned for the trace's operating points."""
+    cfg, runner, inputs = setup
+    trace = BandwidthTrace(steps=[(0.0, 20.0), (3.0, 0.5)])
+    mgr = _mgr(runner, inputs)                # note: no standby_split
+    ctl = NeukonfigController(mgr, _toy_profile(), trace,
+                              strategy="switch_a")
+    assert mgr.standby is not None and mgr.standby.ready
+    events = [e for e in ctl.run(5.0) if e.report]
+    assert len(events) == 1 and events[0].report.cache_hit
+
+
+def test_controller_drives_switch_pool_predictively(setup):
+    """Through the controller, switch_pool learns the trace: the second
+    bandwidth change lands on a pre-built pipeline (Scenario-A downtime)."""
+    cfg, runner, inputs = setup
+    trace = BandwidthTrace(steps=[(0.0, 20.0), (3.0, 0.5), (6.0, 20.0)])
+    mgr = _mgr(runner, inputs)
+    ctl = NeukonfigController(mgr, _toy_profile(), trace,
+                              strategy="switch_pool(k=1)",
+                              candidate_splits=())   # cold start: must learn
+    events = [e for e in ctl.run(9.0) if e.report]
+    assert len(events) == 2
+    assert not events[0].report.cache_hit     # first move: unseen optimum
+    assert events[1].report.cache_hit         # predicted from the trend
+    assert events[1].report.downtime < events[0].report.downtime
