@@ -95,6 +95,7 @@ def run_pool_budget(arch="qwen2.5-3b", cycles=3):
                               mem_budget_bytes=budget)
         reps = [mgr.repartition("switch_pool(k=2)", s)
                 for _ in range(cycles) for s in (2, 1)]
+        mgr.close()           # settle trailing speculation before accounting
         mem = mgr.memory_report()
         rows.append({
             "name": f"pool_budget/{arch}/"

@@ -16,12 +16,24 @@ Scenario-A downtime that k<=1 cannot.
 Each (strategy, direction) is measured over a full 20->5->20 cycle so the
 warm-cache benefit of Scenario B Case 2 ("same container") is visible from
 the second switch onward, exactly like a long-running deployment.
+
+Overlapped switching: standby rebuilds and speculation run on the pool's
+background ``BuildExecutor``, so every row separates ``blocked_ms`` (time
+the serving thread spent inside ``switch()``) from ``bg_wall_ms`` (worker
+wall time afterwards).  ``sync_equiv_ms`` = blocked + background is what
+the same switch cost when backgrounds ran synchronously on the serving
+thread (the pre-overlap behaviour), so ``reduction_x`` is directly the
+serving-thread win.  Between switches the driver drains the worker —
+modelling the seconds-long gap between real bandwidth changes — without
+charging that time to the switch path.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import time
+import uuid
 import warnings
 
 import jax
@@ -45,18 +57,31 @@ def _make_mgr(cfg, params, split, standby_split=None):
                            standby_split=standby_split), {"tokens": toks}
 
 
-def _append_summary_jsonl(rows, name, out_dir="experiments/results"):
-    """One JSON row per strategy: the memory-vs-downtime trade-off table."""
+def _run_id() -> str:
+    """One id per benchmark invocation so appended JSONL rows stay grouped."""
+    return f"{time.strftime('%Y%m%dT%H%M%S')}-{uuid.uuid4().hex[:6]}"
+
+
+def _append_summary_jsonl(rows, name, run_id, out_dir="experiments/results"):
+    """Append one JSON row per strategy (the memory-vs-downtime trade-off
+    table), keyed by ``run_id`` — successive runs accumulate, so the file
+    holds the perf trajectory across invocations."""
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"{name}.jsonl")
-    with open(path, "w") as f:
+    with open(path, "a") as f:
         for r in rows:
-            f.write(json.dumps(r) + "\n")
+            f.write(json.dumps({"run_id": run_id, **r}) + "\n")
     return path
 
 
 def _cycle(mgr, inputs, spec, schedule, cycles):
-    """Run `cycles` passes of (bw, split) switches; returns (downs, reps)."""
+    """Run `cycles` passes of (bw, split) switches; returns (downs, reps).
+
+    ``repartition`` drains outstanding background builds before switching
+    (the inter-switch gap), so ``rep.t_blocked`` is purely the in-switch
+    serving-thread cost; a final drain settles trailing background work so
+    every report's ``t_background_wall`` is filled in.
+    """
     downs, reps = [], []
     for _ in range(cycles):
         for bw, split in schedule:
@@ -65,6 +90,7 @@ def _cycle(mgr, inputs, spec, schedule, cycles):
             downs.append(rep.downtime)
             reps.append(rep)
             mgr.serve(inputs)                  # service must be alive
+    mgr.drain()
     return downs, reps
 
 
@@ -76,6 +102,7 @@ def run(arch="qwen2.5-3b", num_layers=None, cycles=2):
     split_fast, split_slow = 1, max(1, cfg.num_layers)  # 20 vs 5 Mbps optima
     schedule = ((5.0, split_slow), (20.0, split_fast))
     rows, summary = [], []
+    run_id = _run_id()
     for spec in benchmark_specs():
         mgr, inputs = _make_mgr(cfg, params, split_fast)
         strat = mgr.get_strategy(spec)
@@ -89,27 +116,38 @@ def run(arch="qwen2.5-3b", num_layers=None, cycles=2):
                 "downtime_ms": round(rep.downtime * 1e3, 3),
                 "t_build_ms": round(rep.t_build * 1e3, 3),
                 "t_switch_ms": round(rep.t_switch * 1e3, 3),
+                "blocked_ms": round(rep.t_blocked * 1e3, 3),
+                "bg_wall_ms": round(rep.t_background_wall * 1e3, 3),
                 "full_outage": int(rep.full_outage),
                 "cache_hit": int(rep.cache_hit),
             })
         mem = mgr.memory_report()
         base = mem["initial_bytes"] or 1
+        blocked = [r.t_blocked for r in reps]
+        bg = [r.t_background_wall for r in reps]
         summary.append({
             "strategy": spec, "arch": arch, "num_layers": cfg.num_layers,
             "trace": "20<->5",
             "first_ms": round(downs[0] * 1e3, 3),
             "steady_ms": round(float(np.mean(downs[2:])) * 1e3, 3),
+            "blocked_steady_ms": round(float(np.mean(blocked[2:])) * 1e3, 3),
+            "background_ms": round(float(np.mean(bg[2:])) * 1e3, 3),
+            "sync_equiv_ms": round(float(np.mean(
+                [b + g for b, g in zip(blocked[2:], bg[2:])])) * 1e3, 3),
             "mem_total_mb": round(mem["total_bytes"] / 2 ** 20, 2),
             "mem_x_baseline": round(mem["total_bytes"] / base, 2),
             "full_outage": bool(reps[0].full_outage),
         })
         print(f"# {arch} L{cfg.num_layers} {spec:17s}: "
               f"first {downs[0]*1e3:8.1f} ms, steady "
-              f"{np.mean(downs[2:])*1e3:8.1f} ms, "
+              f"{np.mean(downs[2:])*1e3:8.1f} ms, blocked "
+              f"{summary[-1]['blocked_steady_ms']:8.1f} ms, "
               f"mem {summary[-1]['mem_x_baseline']:.1f}x")
+        mgr.close()
     emit(rows, f"fig11_13_downtime_{arch}")
     _append_summary_jsonl(summary,
-                          f"fig11_13_downtime_{arch}-L{cfg.num_layers}_summary")
+                          f"fig11_13_downtime_{arch}-L{cfg.num_layers}_summary",
+                          run_id)
     return rows
 
 
@@ -127,6 +165,7 @@ def run_tradeoff(arch="qwen2.5-3b", cycles=3):
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     schedule = ((20.0, 1), (10.0, 2), (5.0, 3))
     summary = []
+    run_id = _run_id()
     for spec in benchmark_specs():
         mgr, inputs = _make_mgr(cfg, params, 1)
         strat = mgr.get_strategy(spec)
@@ -140,9 +179,17 @@ def run_tradeoff(arch="qwen2.5-3b", cycles=3):
         mem = mgr.memory_report()
         base = mem["initial_bytes"] or 1
         n = len(schedule) - 1                  # reps produced by the warmup
+        blocked = [r.t_blocked for r in reps[n:]]
+        sync_equiv = [r.t_blocked + r.t_background_wall for r in reps[n:]]
         summary.append({
             "strategy": spec, "arch": arch, "trace": "20->10->5 rotation",
             "steady_ms": round(float(np.mean(downs[n:])) * 1e3, 3),
+            "blocked_ms": round(float(np.mean(blocked)) * 1e3, 3),
+            "background_ms": round(float(np.mean(
+                [r.t_background_wall for r in reps[n:]])) * 1e3, 3),
+            "sync_equiv_ms": round(float(np.mean(sync_equiv)) * 1e3, 3),
+            "blocked_reduction_x": round(
+                float(np.mean(sync_equiv) / max(np.mean(blocked), 1e-9)), 1),
             "hit_rate": round(float(np.mean([r.cache_hit
                                              for r in reps[n:]])), 2),
             "mem_x_baseline": round(mem["total_bytes"] / base, 2),
@@ -150,10 +197,13 @@ def run_tradeoff(arch="qwen2.5-3b", cycles=3):
                 w.category, StandbySplitMismatch)]),
         })
         print(f"# rotation {spec:17s}: steady "
-              f"{summary[-1]['steady_ms']:8.1f} ms, hit rate "
-              f"{summary[-1]['hit_rate']:.2f}, mem "
+              f"{summary[-1]['steady_ms']:8.1f} ms, blocked "
+              f"{summary[-1]['blocked_ms']:8.1f} ms "
+              f"({summary[-1]['blocked_reduction_x']:6.1f}x less than sync), "
+              f"hit rate {summary[-1]['hit_rate']:.2f}, mem "
               f"{summary[-1]['mem_x_baseline']:.1f}x")
-    _append_summary_jsonl(summary, f"tradeoff_rotation_{arch}_summary")
+        mgr.close()
+    _append_summary_jsonl(summary, f"tradeoff_rotation_{arch}_summary", run_id)
     return summary
 
 

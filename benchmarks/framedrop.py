@@ -32,6 +32,7 @@ def run(arch="qwen2.5-3b"):
             mgr.set_network(NetworkModel(bw))
             _, timing = mgr.serve(inputs)      # old-pipeline service time
             rep = mgr.repartition(strat, 2)
+            mgr.close()       # settle background builds, stop the worker
             for fps in FPS_LIST:
                 sim = simulate_window(fps=fps, window=rep.downtime,
                                       service_time=timing.t_edge,

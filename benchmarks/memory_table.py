@@ -74,6 +74,7 @@ def run(arch="qwen2.5-3b"):
         mgr.get_strategy(spec).prepare(mgr.pool, candidate_splits=(2, 1))
         for split in (2, 1, 2):
             mgr.repartition(spec, split)
+        mgr.close()           # steady state = background builds settled
         report(spec, mgr)
 
     base_mb = rows[0]["value"]

@@ -1,6 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole test suite, fail-fast.
+# Tier-1 verification: the whole test suite, fail-fast, then the fast
+# switch-path microbenchmark smoke (records the perf trajectory in
+# BENCH_switch.json every run; non-fatal so perf noise can't mask a
+# green test suite).  Set SKIP_BENCH=1 to run tests only.
 #   ./ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/switch_micro.py --smoke \
+        || echo "WARN: switch_micro smoke failed (non-fatal)" >&2
+fi

@@ -37,6 +37,7 @@ def run_strategy(strategy, cfg, fps):
     ctl = NeukonfigController(mgr, profile, trace, strategy=strategy)
     events = ctl.run(90.0)
     _, timing = mgr.serve(sample)
+    ctl.close()       # stop this pool's build worker before the next sweep
     total_down = sum(e.report.downtime for e in events if e.report)
     n_switch = len([e for e in events if e.report])
     dropped = arrived = 0

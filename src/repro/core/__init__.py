@@ -5,6 +5,8 @@ from repro.core.controller import (CooldownPolicy, HysteresisPolicy,
                                    RepartitionEvent, RepartitionPolicy,
                                    get_policy)
 from repro.core.downtime import SimResult, simulate_window, sweep_fps
+from repro.core.executor import (BackgroundBuildFailed, BuildExecutor,
+                                 BuildHandle)
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, ICI_LINK_BW, TPU_V5E
 from repro.core.network import (BandwidthTrace, NetworkModel, NetworkMonitor,
                                 PAPER_TRACE)

@@ -7,6 +7,13 @@ registry spec, e.g. ``"switch_b2"`` or ``"switch_pool(k=2)"``).  The
 strategy's ``observe`` hook is fed every network sample plus the model
 profile, which is how predictive strategies learn the bandwidth trend.
 
+Strategies run background builds (standby rebuilds, speculation) on the
+pool's ``BuildExecutor``.  The controller owns the await points: before a
+repartition it drains outstanding builds — the poll interval is *virtual*
+time, so "the background build finished during the gap" is the semantics
+a real deployment would see — and ``run()`` drains once more at the end
+so callers observe a settled pool.
+
 Policies (the paper repartitions on *every* change; the others are the
 repartition-frequency control its section VI leaves as future work):
 
@@ -153,6 +160,9 @@ class NeukonfigController:
                                        profile=self.profile, net=net)
         ev = RepartitionEvent(t, net.bandwidth_mbps, current, best.split, None)
         if do:
+            # await background builds first: poll gaps are virtual seconds,
+            # far longer than a build, so by repartition time they are done
+            self.mgr.pool.drain()
             ev.report = self.strategy.switch(self.mgr.pool, best.split)
             self.policy.notify_switched(t)
         self.events.append(ev)
@@ -163,4 +173,9 @@ class NeukonfigController:
         while t <= duration:
             self.step(t)
             t += self.poll_dt
+        self.mgr.pool.drain()       # settle trailing background builds
         return self.events
+
+    def close(self) -> None:
+        """Settle background work and stop the pool's build worker."""
+        self.mgr.pool.close()

@@ -1,0 +1,170 @@
+"""BuildExecutor: the worker thread behind overlapped switching.
+
+NEUKONFIG's central claim is that a new pipeline is initialised *while the
+old one keeps serving*.  This module supplies the mechanism: a single
+daemon worker thread that runs pipeline builds off the serving thread.
+XLA compilation releases the GIL, so a background trace+compile genuinely
+overlaps foreground `process()` calls on CPython.
+
+Design points:
+
+* ``submit`` returns a ``BuildHandle`` immediately; the serving thread
+  never blocks on a build unless it explicitly ``wait``s.
+* A failed build never kills the worker: the exception is captured on the
+  handle and surfaced by ``drain()``/``wait()`` on the *calling* thread as
+  a ``BackgroundBuildFailed`` warning — deterministic, testable, and the
+  service keeps running on the old pipeline (the paper's availability
+  story must survive a broken rebuild).
+* ``drain()`` blocks until every submitted job has finished, which is how
+  tier-1 tests stay single-threaded-reproducible: do async work, drain,
+  then assert.
+* ``inline=True`` turns the executor into a synchronous stub (jobs run on
+  the calling thread at submit time) for environments where threads are
+  unavailable or determinism must be absolute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import warnings
+from typing import Any, Callable, List, Optional
+
+
+class BackgroundBuildFailed(UserWarning):
+    """A background pipeline build raised; service continuity is unaffected."""
+
+
+class BuildHandle:
+    """Future-like handle for one submitted build job."""
+
+    def __init__(self, fn: Callable[[], Any], key: Any = None):
+        self.fn = fn
+        self.key = key
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.t_submit = time.perf_counter()
+        self.t_wall = 0.0           # execution wall time (on the worker)
+        self._event = threading.Event()
+        self._completed = False     # job body finished (callbacks may still run)
+        self._callbacks: List[Callable[["BuildHandle"], None]] = []
+        self._cb_lock = threading.Lock()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the job finished; True if it did within ``timeout``."""
+        return self._event.wait(timeout)
+
+    def add_done_callback(self, fn: Callable[["BuildHandle"], None]) -> None:
+        """Run ``fn(handle)`` after completion (immediately if already done).
+
+        Callbacks run on the worker thread (or the submitting thread for an
+        inline executor / already-done handle); they must not block.
+        """
+        run_now = False
+        with self._cb_lock:
+            if self._completed:
+                run_now = True
+            else:
+                self._callbacks.append(fn)
+        if run_now:
+            fn(self)
+
+    # -- worker side -----------------------------------------------------
+    def _run(self) -> None:
+        t0 = time.perf_counter()
+        try:
+            self.result = self.fn()
+        except BaseException as e:          # surfaced later, never fatal
+            self.error = e
+        self.t_wall = time.perf_counter() - t0
+        with self._cb_lock:
+            self._completed = True
+            callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            try:
+                cb(self)
+            except Exception as e:
+                warnings.warn(f"build completion callback raised: {e!r}",
+                              BackgroundBuildFailed)
+        # the event fires only after every registered callback ran, so
+        # wait()/drain() observing completion also observe the callbacks'
+        # effects (failure records, report fields, registry cleanup)
+        self._event.set()
+
+
+class BuildExecutor:
+    """Single background worker that runs build jobs FIFO.
+
+    One worker (not a pool) is deliberate: concurrent *jobs* would contend
+    for the same XLA compilation threads and interleave pool mutations;
+    within one job, `EdgeCloudPipeline.build` already compiles its two
+    stages in parallel.
+    """
+
+    def __init__(self, name: str = "neukonfig-build", inline: bool = False):
+        self.name = name
+        self.inline = inline
+        self._q: "queue.SimpleQueue[Optional[BuildHandle]]" = queue.SimpleQueue()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._outstanding = 0
+        self._idle = threading.Condition(self._lock)
+        self._shutdown = False
+
+    # -- submission -------------------------------------------------------
+    def submit(self, fn: Callable[[], Any], *, key: Any = None) -> BuildHandle:
+        handle = BuildHandle(fn, key=key)
+        if self.inline:
+            handle._run()
+            return handle
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("BuildExecutor is shut down")
+            self._outstanding += 1
+            self._ensure_worker()
+        self._q.put(handle)
+        return handle
+
+    def _ensure_worker(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._loop, name=self.name,
+                                            daemon=True)
+            self._thread.start()
+
+    # -- worker loop ------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            handle = self._q.get()
+            if handle is None:                  # shutdown sentinel
+                return
+            handle._run()
+            with self._idle:
+                self._outstanding -= 1
+                if self._outstanding == 0:
+                    self._idle.notify_all()
+
+    # -- synchronisation ---------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted job completed; True on success."""
+        if self.inline:
+            return True
+        with self._idle:
+            return self._idle.wait_for(lambda: self._outstanding == 0,
+                                       timeout=timeout)
+
+    def shutdown(self, *, drain: bool = True) -> None:
+        if drain:
+            self.drain()
+        with self._lock:
+            self._shutdown = True
+        if self._thread is not None and self._thread.is_alive():
+            self._q.put(None)
+            self._thread.join(timeout=5.0)

@@ -4,6 +4,11 @@ Minimises Eq. 1 over all split points given a ModelProfile and the current
 NetworkModel.  Also exposes the full latency curve used to reproduce
 Figs. 2-3 and a memory-feasibility filter (the paper notes the edge cannot
 host partitions when <=10% memory is available).
+
+Complexity: ``ModelProfile.latency`` is O(1) via cached prefix sums, so
+``latency_curve`` and ``optimal_split`` are O(n) in the number of units —
+cheap enough to re-solve on every network sample (the controller does),
+see ``benchmarks/switch_micro.py`` for the scaling measurement.
 """
 from __future__ import annotations
 

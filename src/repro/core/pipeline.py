@@ -5,9 +5,18 @@ transfer with the current NetworkModel (virtual time — there is no real
 5 Mbps link in this container), and runs stage-cloud (measured wall-clock,
 scaled by the cloud/edge speed ratio so a 1-core host still reproduces the
 testbed's asymmetry).  Per-request breakdown mirrors Eq. 1.
+
+``build`` is AOT: both stages compile via ``jit(...).lower(...).compile()``
+against abstract avals (the boundary aval comes from an ``eval_shape``
+trace, so no sample ever executes), and the edge and cloud compilations
+run concurrently — XLA compilation releases the GIL, so the two stages
+overlap and a build costs roughly max(stage) instead of
+sum(trace+compile+execute) per stage.
 """
 from __future__ import annotations
 
+import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
@@ -17,7 +26,23 @@ import numpy as np
 
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC
 from repro.core.network import NetworkModel
-from repro.core.stages import StageRunner
+from repro.core.stages import StageRunner, abstractify, aval_fingerprint
+
+
+def _parallel_build_default() -> bool:
+    """Compile the two stages concurrently only when cores allow it.
+
+    On <=2 cores the two XLA compilations just contend (each slows ~2x, so
+    the wall time matches serial plus thread overhead); from 3 cores up the
+    overlap is a real win.  ``NEUKONFIG_PARALLEL_BUILD=0/1`` overrides.
+    """
+    env = os.environ.get("NEUKONFIG_PARALLEL_BUILD")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off", "")
+    return (os.cpu_count() or 1) >= 3
+
+
+PARALLEL_BUILD = _parallel_build_default()
 
 
 @dataclass
@@ -36,6 +61,8 @@ class BuildReport:
     t_weights: float = 0.0        # weight placement / reload
     t_compile_edge: float = 0.0
     t_compile_cloud: float = 0.0
+    t_wall: float = 0.0           # end-to-end build wall time; less than
+                                  # ``total`` when the stages overlapped
 
     @property
     def total(self) -> float:
@@ -56,6 +83,9 @@ class EdgeCloudPipeline:
         self.edge_fn: Optional[Callable] = None
         self.cloud_fn: Optional[Callable] = None
         self.params = runner.params
+        # build-time input avals per stage; None = retracing jit path
+        self._edge_avals = None
+        self._cloud_avals = None
 
     # -- build ----------------------------------------------------------
     def build(self, sample_inputs, *, cold: bool, reload_from: Optional[str] = None
@@ -87,17 +117,43 @@ class EdgeCloudPipeline:
 
         lo_e, hi_e = 0, self.split + 1
         lo_c, hi_c = self.split + 1, r.num_units
-        make = r.fresh_stage_fn if cold else r.stage_fn
+        t_wall0 = time.perf_counter()
+        in_avals = abstractify(sample_inputs)
+        edge_box: Dict[str, Any] = {}
+
+        def _compile_edge():
+            t0 = time.perf_counter()
+            try:
+                edge_box["fn"] = r.stage_executable(
+                    lo_e, hi_e, self.params, in_avals, fresh=cold)
+            except BaseException as e:
+                edge_box["error"] = e
+            rep.t_compile_edge = time.perf_counter() - t0
+
+        # edge compiles on a helper thread while this thread derives the
+        # boundary aval (an eval_shape trace — the sample never executes)
+        # and compiles the cloud stage; XLA releases the GIL, so the two
+        # compilations genuinely overlap when the host has cores to spare
+        th = None
+        if PARALLEL_BUILD:
+            th = threading.Thread(target=_compile_edge,
+                                  name="edge-stage-compile")
+            th.start()
         t0 = time.perf_counter()
-        self.edge_fn = make(lo_e, hi_e)
-        out = self.edge_fn(self.params, sample_inputs)
-        jax.block_until_ready(out)
-        rep.t_compile_edge = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        self.cloud_fn = make(lo_c, hi_c)
-        out2 = self.cloud_fn(self.params, out)
-        jax.block_until_ready(out2)
+        mid_avals = r.stage_out_avals(lo_e, hi_e, self.params, in_avals)
+        cloud_fn = r.stage_executable(lo_c, hi_c, self.params, mid_avals,
+                                      fresh=cold)
         rep.t_compile_cloud = time.perf_counter() - t0
+        if th is not None:
+            th.join()
+        else:
+            _compile_edge()
+        if "error" in edge_box:
+            raise edge_box["error"]
+        self.edge_fn, self.cloud_fn = edge_box["fn"], cloud_fn
+        self._edge_avals = aval_fingerprint(in_avals)
+        self._cloud_avals = aval_fingerprint(mid_avals)
+        rep.t_wall = rep.t_weights + (time.perf_counter() - t_wall0)
         return rep
 
     @property
@@ -109,13 +165,45 @@ class EdgeCloudPipeline:
         self.edge_fn = None
         self.cloud_fn = None
         self.params = None
+        # a closed pipeline must surface its error, not retrace
+        self._edge_avals = None
+        self._cloud_avals = None
 
     # -- serve ------------------------------------------------------------
+    def _run_edge(self, inputs):
+        try:
+            return self.edge_fn(self.params, inputs)
+        except TypeError:
+            # AOT executables are specialized to the build-time avals; iff
+            # the fingerprints really differ, fall back to the retracing
+            # warm path (and stay there — jit caches per shape from here
+            # on).  Any other TypeError (closed pipeline, model bug)
+            # propagates.  The check runs only on failure, so steady-state
+            # serving pays nothing.
+            if self._edge_avals is None \
+                    or aval_fingerprint(inputs) == self._edge_avals:
+                raise
+            self._edge_avals = None
+            self.edge_fn = self.runner.stage_fn(0, self.split + 1)
+            return self.edge_fn(self.params, inputs)
+
+    def _run_cloud(self, h):
+        try:
+            return self.cloud_fn(self.params, h)
+        except TypeError:
+            if self._cloud_avals is None \
+                    or aval_fingerprint(h) == self._cloud_avals:
+                raise
+            self._cloud_avals = None
+            self.cloud_fn = self.runner.stage_fn(self.split + 1,
+                                                 self.runner.num_units)
+            return self.cloud_fn(self.params, h)
+
     def process(self, inputs, *, batch: int = 1, seq: Optional[int] = None
                 ) -> tuple[Any, RequestTiming]:
         assert self.ready, "pipeline not built"
         t0 = time.perf_counter()
-        h = self.edge_fn(self.params, inputs)
+        h = self._run_edge(inputs)
         jax.block_until_ready(h)
         t_edge = (time.perf_counter() - t0) * self.edge_scale
         if seq is None:
@@ -123,7 +211,7 @@ class EdgeCloudPipeline:
         bbytes = self.runner.boundary_bytes(self.split, batch, seq)
         t_transfer = self.net.transfer_time(bbytes)
         t0 = time.perf_counter()
-        out = self.cloud_fn(self.params, h)
+        out = self._run_cloud(h)
         jax.block_until_ready(out)
         t_cloud = time.perf_counter() - t0
         return out["logits"], RequestTiming(t_edge, t_transfer, t_cloud)

@@ -5,7 +5,7 @@ The pool owns every built ``EdgeCloudPipeline``, keyed by
 
 * ``owns_weights=False`` entries share the runner's weight buffers (the
   paper's "same container" / Case-2 configurations, 1x memory) and reuse
-  the runner's jit cache for warm builds;
+  the runner's compiled-stage caches for warm builds;
 * ``owns_weights=True`` entries hold a second weight copy (Case-1 standby
   / "new container", +1x memory each) and are charged against the pool's
   ``mem_budget_bytes``.
@@ -17,16 +17,37 @@ evicted; a designated Scenario-A standby is evicted last).  Strategies
 never construct pipelines directly — they call ``ensure`` / ``activate``
 / ``release`` so that memory accounting (paper Table I) stays in one
 place.
+
+Async lifecycle (overlapped switching).  Builds can also run off the
+serving thread: ``submit_build`` hands the job to a ``BuildExecutor``
+worker and returns a ``BuildHandle`` immediately, registering the key in
+a *pending-build* registry.  While a key is pending:
+
+* duplicate ``submit_build`` calls coalesce onto the same handle,
+* ``release``/eviction refuse to reap it (an in-flight build must not be
+  torn down under the worker),
+* ``wait(split, owns_weights)`` blocks until it lands, and
+* ``drain()`` blocks until *all* pending builds land — the deterministic
+  barrier tier-1 tests and benchmarks use before asserting pool state.
+
+A failed background build never kills the worker or the service: the
+error is recorded and surfaced as a ``BackgroundBuildFailed`` warning on
+the next ``wait``/``drain`` (on the calling thread, deterministically).
+The pool's mutating operations are guarded by an RLock, so the serving
+thread's pointer swap never races the worker's entry insertion.
 """
 from __future__ import annotations
 
 import os
 import tempfile
+import threading
 import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro.core.executor import (BackgroundBuildFailed, BuildExecutor,
+                                 BuildHandle)
 from repro.core.network import NetworkModel
 from repro.core.pipeline import BuildReport, EdgeCloudPipeline
 from repro.core.stages import StageRunner
@@ -62,7 +83,8 @@ class PipelinePool:
                  *, checkpoint_path: Optional[str] = None,
                  mem_budget_bytes: Optional[int] = None,
                  standby_owns_weights: bool = True,
-                 max_entries: int = 16):
+                 max_entries: int = 16,
+                 executor: Optional[BuildExecutor] = None):
         self.runner = runner
         self.net = net
         self.sample_inputs = sample_inputs
@@ -74,6 +96,11 @@ class PipelinePool:
         self.active_key: Optional[PoolKey] = None
         self.standby_key: Optional[PoolKey] = None
         self._checkpoint_path = checkpoint_path
+        self._lock = threading.RLock()
+        self._executor = executor
+        self._pending: Dict[PoolKey, BuildHandle] = {}
+        self._standby_handle: Optional[BuildHandle] = None
+        self._build_failures: List[Tuple[PoolKey, BaseException]] = []
 
     @property
     def checkpoint_path(self) -> str:
@@ -87,6 +114,14 @@ class PipelinePool:
             self._checkpoint_path = path
         return self._checkpoint_path
 
+    @property
+    def executor(self) -> BuildExecutor:
+        """Lazily-started background build worker."""
+        with self._lock:
+            if self._executor is None:
+                self._executor = BuildExecutor()
+            return self._executor
+
     # -- bookkeeping -------------------------------------------------------
     def __contains__(self, key: PoolKey) -> bool:
         return key in self._entries
@@ -95,7 +130,8 @@ class PipelinePool:
         return len(self._entries)
 
     def keys(self) -> Iterator[PoolKey]:
-        return iter(list(self._entries))
+        with self._lock:
+            return iter(list(self._entries))
 
     def has(self, split: int, owns_weights: bool = False) -> bool:
         e = self._entries.get((split, owns_weights))
@@ -105,8 +141,9 @@ class PipelinePool:
         return self._entries.get(key)
 
     def _touch(self, entry: PoolEntry) -> None:
-        self._clock += 1
-        entry.last_used = self._clock
+        with self._lock:
+            self._clock += 1
+            entry.last_used = self._clock
 
     @property
     def active(self) -> Optional[EdgeCloudPipeline]:
@@ -119,9 +156,10 @@ class PipelinePool:
         return e.pipeline if e else None
 
     def set_network(self, net: NetworkModel) -> None:
-        self.net = net
-        for e in self._entries.values():
-            e.pipeline.net = net
+        with self._lock:
+            self.net = net
+            for e in self._entries.values():
+                e.pipeline.net = net
 
     # -- build / reuse -----------------------------------------------------
     def ensure(self, split: int, *, owns_weights: bool = False,
@@ -133,94 +171,276 @@ class PipelinePool:
         zero build cost — what ``switch_pool`` exploits); ``reuse=False``
         rebuilds even if cached, which is what the paper's B strategies
         mean by t_init / t_exec.  Returns ``(entry, cache_hit)``.
+
+        Safe to call from the build worker: the (long) compile runs
+        outside the pool lock; only the entry insertion is serialized.
         """
         key = (split, owns_weights)
         if reuse:
-            cached = self._entries.get(key)
-            if cached is not None and cached.pipeline.ready:
-                self._touch(cached)
-                return cached, True
+            with self._lock:
+                cached = self._entries.get(key)
+                if cached is not None and cached.pipeline.ready:
+                    self._touch(cached)
+                    return cached, True
         pipe = EdgeCloudPipeline(self.runner, split, self.net,
                                  owns_weights=owns_weights)
         report = pipe.build(self.sample_inputs, cold=cold,
                             reload_from=reload_from)
-        replaced = self._entries.get(key)
-        if replaced is not None and replaced.pipeline is not self.active:
-            replaced.pipeline.close()
-        entry = PoolEntry(key, pipe, report)
-        self._entries[key] = entry
-        self._touch(entry)
-        # never evict the entry we were asked for — callers may be about to
-        # activate it; speculative builders re-run evict_to_budget() themselves
-        self.evict_to_budget(keep=key)
-        self._evict_over_capacity(keep=key)
+        with self._lock:
+            replaced = self._entries.get(key)
+            if replaced is not None:
+                # rebuilding the active key orphans the old active object the
+                # moment the dict entry is swapped (``self.active`` resolves
+                # through ``_entries``), so it must be closed either way —
+                # keeping it alive was a leak
+                replaced.pipeline.close()
+            entry = PoolEntry(key, pipe, report)
+            self._entries[key] = entry
+            self._touch(entry)
+            # never evict the entry we were asked for — callers may be about
+            # to activate it; speculative builders re-run evict_to_budget()
+            # themselves
+            self.evict_to_budget(keep=key)
+            self._evict_over_capacity(keep=key)
         return entry, False
+
+    def resolve_standby_ownership(self, owns_weights: Optional[bool]) -> bool:
+        """None -> the pool's configured standby default."""
+        return self.standby_owns_weights if owns_weights is None \
+            else owns_weights
 
     def build_standby(self, split: int,
                       owns_weights: Optional[bool] = None) -> float:
         """(Re)build the Scenario-A standby; returns wall-clock build time."""
-        ow = self.standby_owns_weights if owns_weights is None else owns_weights
+        ow = self.resolve_standby_ownership(owns_weights)
         t0 = time.perf_counter()
         entry, _ = self.ensure(split, owns_weights=ow, cold=ow, reuse=False)
-        self.standby_key = entry.key
+        with self._lock:
+            self.standby_key = entry.key
         return time.perf_counter() - t0
+
+    # -- background builds -------------------------------------------------
+    def pending(self, split: int, owns_weights: bool = False
+                ) -> Optional[BuildHandle]:
+        """The in-flight build handle for a key, if any."""
+        return self._pending.get((split, owns_weights))
+
+    def submit_build(self, split: int, *, owns_weights: bool = False,
+                     cold: bool = False, reuse: bool = True,
+                     standby: bool = False, enforce_budget: bool = False,
+                     on_done: Optional[Callable[[BuildHandle], None]] = None
+                     ) -> BuildHandle:
+        """Queue a build on the background worker; returns immediately.
+
+        Duplicate submissions for a key already in flight coalesce onto the
+        existing handle (the first submission's build mode wins, but a
+        coalesced ``standby=True`` still arms the standby when the build
+        lands).  ``on_done`` fires only for a build this call actually
+        created, so per-switch background accounting never double-counts a
+        shared build.  ``standby=True`` marks the result as the Scenario-A
+        standby; ``enforce_budget=True`` re-runs ``evict_to_budget()``
+        after the build lands, which is the speculative builders'
+        best-effort contract.
+        """
+        key = (split, owns_weights)
+        with self._lock:
+            existing = self._pending.get(key)
+            if existing is not None:
+                if standby:
+                    self._standby_handle = existing
+
+                    def _mark_standby(h: BuildHandle) -> None:
+                        if h.error is None and h.result is not None:
+                            with self._lock:
+                                if h.result.key != self.active_key:
+                                    self.standby_key = h.result.key
+
+                    existing.add_done_callback(_mark_standby)
+                return existing
+
+            def job():
+                with self._lock:
+                    if key == self.active_key and key in self._entries:
+                        # never rebuild the pipeline that is serving: the
+                        # replacement close() would yank edge_fn/params out
+                        # from under an in-flight process() call.  (It can
+                        # become the active key between submit and run —
+                        # e.g. a mismatch switch activating the standby.)
+                        return self._entries[key]
+                entry, _ = self.ensure(split, owns_weights=owns_weights,
+                                       cold=cold, reuse=reuse)
+                with self._lock:
+                    if standby and entry.key != self.active_key:
+                        self.standby_key = entry.key
+                    if enforce_budget:
+                        # best-effort speculation may reap the entry it just
+                        # built (budget-0 must not pin itself alive); only
+                        # this job's own key loses its in-flight protection
+                        self.evict_to_budget(reap_pending=(key,))
+                return entry
+
+            handle = self.executor.submit(job, key=key)
+            self._pending[key] = handle
+            if standby:
+                self._standby_handle = handle
+
+            def _finish(h: BuildHandle) -> None:
+                with self._lock:
+                    self._pending.pop(key, None)
+                    if h.error is not None:
+                        self._build_failures.append((key, h.error))
+
+            handle.add_done_callback(_finish)
+            if on_done is not None:
+                handle.add_done_callback(on_done)
+        return handle
+
+    def wait(self, split: int, owns_weights: bool = False,
+             timeout: Optional[float] = None) -> Optional[PoolEntry]:
+        """Block until any in-flight build for the key lands; surface
+        failures; return the entry (None if the build failed/was evicted)."""
+        handle = self._pending.get((split, owns_weights))
+        if handle is not None:
+            handle.wait(timeout)
+        self._surface_failures()
+        return self._entries.get((split, owns_weights))
+
+    def wait_standby(self, timeout: Optional[float] = None
+                     ) -> Optional[EdgeCloudPipeline]:
+        """Block until an in-flight standby build (if any) lands.
+
+        Waits on the build *handle* (which completes strictly after
+        ``standby_key`` is set), so a ready standby is visible on return.
+        """
+        handle = self._standby_handle
+        if handle is not None:
+            handle.wait(timeout)
+        self._surface_failures()
+        return self.standby
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Deterministic barrier: wait for every pending build, then warn
+        (on this thread) for any that failed."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            with self._lock:
+                handles = list(self._pending.values())
+            if not handles:
+                break
+            for h in handles:
+                left = None if deadline is None \
+                    else max(0.0, deadline - time.perf_counter())
+                if not h.wait(left) and deadline is not None:
+                    break
+            if deadline is not None and time.perf_counter() >= deadline:
+                break
+        self._surface_failures()
+
+    def close(self) -> None:
+        """End-of-life: settle background work and stop the worker thread.
+
+        Benchmark sweeps build one pool per strategy; without this each
+        pool would leave an idle daemon worker (and its job closures'
+        references) alive for the life of the process.
+        """
+        self.drain()
+        with self._lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown()
+
+    def _surface_failures(self) -> None:
+        with self._lock:
+            failures, self._build_failures = self._build_failures, []
+        for key, err in failures:
+            warnings.warn(f"background build for {key} failed: {err!r}; "
+                          f"service continues on the previous pipeline",
+                          BackgroundBuildFailed)
 
     # -- activation / teardown ---------------------------------------------
     def activate(self, key: PoolKey) -> float:
         """Atomic pointer swap to an already-built pipeline; returns t_switch."""
-        entry = self._entries[key]
-        assert entry.pipeline.ready, f"pipeline {key} not built"
-        t0 = time.perf_counter()
-        self.active_key = key
-        t_switch = time.perf_counter() - t0
-        if self.standby_key == key:
-            self.standby_key = None
-        self._touch(entry)
+        with self._lock:
+            entry = self._entries[key]
+            assert entry.pipeline.ready, f"pipeline {key} not built"
+            t0 = time.perf_counter()
+            self.active_key = key
+            t_switch = time.perf_counter() - t0
+            if self.standby_key == key:
+                self.standby_key = None
+            self._touch(entry)
         return t_switch
+
+    def try_activate(self, key: PoolKey) -> Optional[float]:
+        """``activate`` that returns None instead of raising when the key
+        vanished (a concurrently-landing build's eviction can reap a
+        non-active entry between a caller's readiness check and the swap)."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None or not entry.pipeline.ready:
+                return None
+            return self.activate(key)
 
     def pause(self) -> Optional[PoolKey]:
         """Stop serving (Pause-and-Resume step ii); returns the old key."""
-        old, self.active_key = self.active_key, None
+        with self._lock:
+            old, self.active_key = self.active_key, None
         return old
 
     def release(self, key: PoolKey) -> None:
-        if key == self.active_key:
-            raise ValueError("cannot release the active pipeline")
-        entry = self._entries.pop(key, None)
-        if entry is None:
-            return
-        if self.standby_key == key:
-            self.standby_key = None
-        entry.pipeline.close()
+        with self._lock:
+            if key == self.active_key:
+                raise ValueError("cannot release the active pipeline")
+            if key in self._pending:
+                raise ValueError(f"cannot release {key}: build in flight")
+            self._release(key)
+
+    def _release(self, key: PoolKey) -> None:
+        """Teardown without the in-flight guard (internal eviction paths
+        perform their own pending checks)."""
+        with self._lock:
+            entry = self._entries.pop(key, None)
+            if entry is None:
+                return
+            if self.standby_key == key:
+                self.standby_key = None
+            entry.pipeline.close()
 
     # -- memory accounting (Table I) ---------------------------------------
     def additional_bytes(self) -> int:
-        return sum(e.charged_bytes for k, e in self._entries.items()
-                   if k != self.active_key)
+        with self._lock:
+            return sum(e.charged_bytes for k, e in self._entries.items()
+                       if k != self.active_key)
 
-    def evict_to_budget(self, keep: Optional[PoolKey] = None
+    def evict_to_budget(self, keep: Optional[PoolKey] = None, *,
+                        reap_pending: Tuple[PoolKey, ...] = ()
                         ) -> List[PoolKey]:
         """Drop LRU non-active entries until charged bytes fit the budget.
 
         ``keep`` protects one key (a just-built entry a caller is about to
-        activate); it may leave the pool transiently over budget.
+        activate); keys with a build in flight are never reaped unless
+        explicitly listed in ``reap_pending`` (a background job releasing
+        its own just-landed entry).  Either may leave the pool transiently
+        over budget.
         """
         if self.mem_budget_bytes is None:
             return []
         evicted: List[PoolKey] = []
-        while self.additional_bytes() > self.mem_budget_bytes:
-            victims = sorted(
-                (e for k, e in self._entries.items()
-                 if k != self.active_key and k != keep
-                 and e.charged_bytes > 0),
-                key=lambda e: (e.key == self.standby_key, e.last_used))
-            if not victims:
-                if keep is None:
-                    warnings.warn("pipeline pool over memory budget but "
-                                  "nothing evictable", RuntimeWarning)
-                break
-            self.release(victims[0].key)
-            evicted.append(victims[0].key)
+        with self._lock:
+            while self.additional_bytes() > self.mem_budget_bytes:
+                victims = sorted(
+                    (e for k, e in self._entries.items()
+                     if k != self.active_key and k != keep
+                     and (k not in self._pending or k in reap_pending)
+                     and e.charged_bytes > 0),
+                    key=lambda e: (e.key == self.standby_key, e.last_used))
+                if not victims:
+                    if keep is None and not self._pending:
+                        warnings.warn("pipeline pool over memory budget but "
+                                      "nothing evictable", RuntimeWarning)
+                    break
+                self._release(victims[0].key)
+                evicted.append(victims[0].key)
         return evicted
 
     def _evict_over_capacity(self, keep: Optional[PoolKey] = None) -> None:
@@ -229,14 +449,16 @@ class PipelinePool:
         splits must not grow the pool without limit."""
         if self.max_entries is None:
             return
-        while len(self._entries) > self.max_entries:
-            victims = sorted(
-                (e for k, e in self._entries.items()
-                 if k not in (self.active_key, self.standby_key, keep)),
-                key=lambda e: e.last_used)
-            if not victims:
-                break
-            self.release(victims[0].key)
+        with self._lock:
+            while len(self._entries) > self.max_entries:
+                victims = sorted(
+                    (e for k, e in self._entries.items()
+                     if k not in (self.active_key, self.standby_key, keep)
+                     and k not in self._pending),
+                    key=lambda e: e.last_used)
+                if not victims:
+                    break
+                self._release(victims[0].key)
 
     def memory_report(self) -> Dict[str, int]:
         base = self.active.live_param_bytes() if self.active else 0

@@ -13,7 +13,7 @@ cited methods:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 import jax
@@ -38,14 +38,44 @@ class UnitProfile:
 class ModelProfile:
     arch: str
     units: List[UnitProfile]
+    # lazily-built prefix sums: (n, cum t_edge, cum t_cloud).  Makes
+    # ``latency`` O(1) and therefore ``latency_curve``/``optimal_split``
+    # O(n) instead of O(n²) — the partitioner re-solves Eq. 1 on every
+    # network sample, so this is the controller's hot path.
+    _psum: Optional[tuple] = field(default=None, init=False, repr=False,
+                                   compare=False)
+    # bumped by invalidate_cache(); downstream memos (e.g. switch_pool's
+    # optimal_split cache) key on (profile, version, len(units))
+    _version: int = field(default=0, init=False, repr=False, compare=False)
 
     def num_splits(self) -> int:
         return len(self.units) - 1  # split after unit i, i in [0, n-2]
 
+    def cache_token(self) -> tuple:
+        """Identity for memos over this profile's current timing data."""
+        return (id(self), self._version, len(self.units))
+
+    def _prefix(self) -> tuple:
+        n = len(self.units)
+        cached = self._psum
+        if cached is not None and cached[0] == n:
+            return cached
+        pe = np.cumsum([u.t_edge for u in self.units])
+        pc = np.cumsum([u.t_cloud for u in self.units])
+        self._psum = (n, pe, pc)
+        return self._psum
+
+    def invalidate_cache(self) -> None:
+        """Call after mutating unit timings in place (adding/removing units
+        is detected automatically)."""
+        self._psum = None
+        self._version += 1
+
     def latency(self, split: int, net: NetworkModel):
         """(T_e, T_t, T_c) for a split after unit `split` (Eq. 1)."""
-        t_e = sum(u.t_edge for u in self.units[:split + 1])
-        t_c = sum(u.t_cloud for u in self.units[split + 1:])
+        n, pe, pc = self._prefix()
+        t_e = float(pe[split])
+        t_c = float(pc[n - 1] - pc[split])
         t_t = net.transfer_time(self.units[split].boundary_bytes)
         return t_e, t_t, t_c
 

@@ -8,17 +8,27 @@ encoder itself is ONE unit, mirroring the paper's rule that parallel paths
 are not split).
 
 ``StageRunner.stage_fn(lo, hi)`` returns a jitted callable for the unit
-range; the lru-cached variant is the Dynamic-Switching "same container"
+range; the cached variant is the Dynamic-Switching "same container"
 (warm) path, while ``fresh_stage_fn`` deliberately builds a new closure so
 jit must retrace+recompile — the "new container" (cold) path.
+
+``stage_executable`` is the AOT fast path: ``jax.jit(...).lower(...)
+.compile()`` against abstract input avals, so a stage compiles without
+ever executing a sample, and the resulting executable is cached per
+``(lo, hi, avals)`` and shared across every pool entry (warm builds never
+retrace).  ``fresh=True`` bypasses the shared cache both ways — the
+deliberate cold "new container" semantics.  All caches are lock-guarded:
+background build threads and the serving thread compile concurrently.
 """
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as Lyr
@@ -30,14 +40,96 @@ def _layer_at(params, i):
     return jax.tree.map(lambda a: a[i], params["layers"])
 
 
-class StageRunner:
+def abstractify(tree):
+    """Pytree of concrete arrays -> pytree of ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda a: a if isinstance(a, jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct(np.shape(a), jnp.result_type(a)), tree)
+
+
+def aval_fingerprint(tree) -> Tuple:
+    """Hashable identity of a pytree's avals (structure + shapes + dtypes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(abstractify(tree))
+    return (str(treedef),) + tuple((tuple(l.shape), str(l.dtype))
+                                   for l in leaves)
+
+
+class _CompiledStageCache:
+    """Warm-path stage compilation shared by every stage-runner flavour.
+
+    Hosts three thread-safe caches: jitted callables (legacy warm path),
+    per-(range, avals) output avals (cheap ``eval_shape`` traces), and
+    per-(range, avals) AOT executables (the no-retrace pool fast path).
+    """
+
+    def _init_stage_caches(self) -> None:
+        self._jit_cache: Dict[Tuple[int, int], Any] = {}
+        self._aot_cache: Dict[Tuple, Any] = {}
+        self._aval_cache: Dict[Tuple, Any] = {}
+        self._cache_lock = threading.RLock()
+
+    def stage_fn(self, lo: int, hi: int):
+        """Warm path: cached jitted callable (Dynamic Switching, same
+        container)."""
+        key = (lo, hi)
+        with self._cache_lock:
+            if key not in self._jit_cache:
+                self._jit_cache[key] = jax.jit(self._make_fn(lo, hi))
+            return self._jit_cache[key]
+
+    def fresh_stage_fn(self, lo: int, hi: int):
+        """Cold path: new closure => jit retrace+recompile (new container)."""
+        return jax.jit(self._make_fn(lo, hi))
+
+    def stage_out_avals(self, lo: int, hi: int, params, state):
+        """Output avals of units [lo, hi) for the given input avals — an
+        abstract trace (``eval_shape``), never an execution."""
+        in_avals = abstractify(state)
+        key = (lo, hi) + aval_fingerprint(in_avals)
+        with self._cache_lock:
+            hit = self._aval_cache.get(key)
+        if hit is not None:
+            return hit
+        out = jax.eval_shape(self._make_fn(lo, hi), abstractify(params),
+                             in_avals)
+        with self._cache_lock:
+            self._aval_cache[key] = out
+        return out
+
+    def stage_executable(self, lo: int, hi: int, params, state, *,
+                         fresh: bool = False):
+        """AOT-compiled executable for units [lo, hi), specialized to the
+        avals of ``(params, state)``.
+
+        ``fresh=False`` consults/populates the shared executable cache so a
+        configuration seen before costs nothing; ``fresh=True`` always
+        retraces and recompiles and leaves no trace in the cache ("new
+        container").  Compilation happens via ``lower().compile()`` against
+        abstract avals: no sample ever executes.
+        """
+        in_avals = abstractify(state)
+        key = (lo, hi) + aval_fingerprint(in_avals)
+        if not fresh:
+            with self._cache_lock:
+                hit = self._aot_cache.get(key)
+            if hit is not None:
+                return hit
+        compiled = jax.jit(self._make_fn(lo, hi)).lower(
+            params, in_avals).compile()
+        if not fresh:
+            with self._cache_lock:
+                self._aot_cache[key] = compiled
+        return compiled
+
+
+class StageRunner(_CompiledStageCache):
     """Executes unit ranges [lo, hi) of a model for full-seq inference."""
 
     def __init__(self, cfg: ArchConfig, params, attn_impl: str = "chunked"):
         self.cfg = cfg
         self.params = params
         self.attn_impl = attn_impl
-        self._jit_cache: Dict[Tuple[int, int], Any] = {}
+        self._init_stage_caches()
 
     # -- unit layout --------------------------------------------------
     @property
@@ -104,17 +196,6 @@ class StageRunner:
             return runner.run_units(state, lo, hi)
         return fn
 
-    def stage_fn(self, lo: int, hi: int):
-        """Warm path: cached jitted callable (Dynamic Switching, same container)."""
-        key = (lo, hi)
-        if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(self._make_fn(lo, hi))
-        return self._jit_cache[key]
-
-    def fresh_stage_fn(self, lo: int, hi: int):
-        """Cold path: new closure => jit retrace+recompile (new container)."""
-        return jax.jit(self._make_fn(lo, hi))
-
     def boundary_bytes(self, split: int, batch: int, seq: int,
                        act_bytes: int = 4) -> int:
         """Bytes crossing the link for a split after unit `split`."""
@@ -125,7 +206,7 @@ class StageRunner:
         return n
 
 
-class CnnStageRunner:
+class CnnStageRunner(_CompiledStageCache):
     """StageRunner-compatible executor for the paper's own CNN models
     (video-analytics workload, Figs. 2-3): unit i = conv/pool/block/dense
     layer; boundary activations VARY with depth, so the optimal split
@@ -142,7 +223,7 @@ class CnnStageRunner:
             _, units, shapes = _cnn.build_cnn(cfg, key)
         self.params, self.units, self.shapes = params, units, shapes
         self._cnn = _cnn
-        self._jit_cache: Dict[Tuple[int, int], Any] = {}
+        self._init_stage_caches()
 
     @property
     def num_units(self) -> int:
@@ -158,15 +239,6 @@ class CnnStageRunner:
                 x = units[i][1](params[i], x)
             return {"logits": x} if last else {"h": x}
         return fn
-
-    def stage_fn(self, lo: int, hi: int):
-        key = (lo, hi)
-        if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(self._make_fn(lo, hi))
-        return self._jit_cache[key]
-
-    def fresh_stage_fn(self, lo: int, hi: int):
-        return jax.jit(self._make_fn(lo, hi))
 
     def boundary_bytes(self, split: int, batch: int, seq: int = 1,
                        act_bytes: int = 4) -> int:

@@ -32,6 +32,23 @@ Strategy -> paper mechanism (all operate against a PipelinePool):
     pre-built in the pool.  A predicted switch is a pointer swap
     (Scenario-A downtime at (1+k)x memory); a miss falls back to the
     B-Case-2 warm build.  k=0 degenerates to B2, k=1 to A Case 1.
+
+Async lifecycle (overlapped switching).  Strategy hooks are: ``prepare``
+once before serving (pre-position standbys — synchronous, deterministic),
+``observe`` on every network sample (feed prediction), ``switch`` per
+repartition, and implicit *background drain*: ``switch_a``'s standby
+rebuild and ``switch_pool``'s speculation are submitted to the pool's
+``BuildExecutor`` and ``switch()`` returns right after the pointer swap.
+Every ``SwitchReport`` therefore separates
+
+* ``t_blocked``      — serving-thread time spent inside ``switch()``
+  (downtime + any synchronous waiting), and
+* ``t_background_wall`` — wall time the build worker spent afterwards,
+  filled in asynchronously once the background build lands (read it after
+  ``pool.drain()`` / ``PipelineManager.drain()``).
+
+If a switch targets a key whose speculative build is still in flight, the
+strategy *awaits that build* instead of duplicating it (a "wait-hit").
 """
 from __future__ import annotations
 
@@ -62,6 +79,9 @@ class SwitchReport:
     build_detail: Optional[BuildReport] = None
     cache_hit: bool = False       # switch landed on a pre-built pipeline
     note: str = ""                # surfaced anomalies (e.g. standby mismatch)
+    t_blocked: float = 0.0        # serving-thread time spent inside switch()
+    t_background_wall: float = 0.0  # worker wall time for deferred builds;
+                                    # filled in async — read after drain()
 
 
 class StandbySplitMismatch(UserWarning):
@@ -213,7 +233,7 @@ class PauseResumeStrategy(SwitchStrategy):
         dt = time.perf_counter() - t0
         return SwitchReport("pause_resume", old, new_split, downtime=dt,
                             t_build=entry.report.total, full_outage=True,
-                            build_detail=entry.report)
+                            build_detail=entry.report, t_blocked=dt)
 
 
 @register_strategy("switch_a")
@@ -232,12 +252,24 @@ class ScenarioAStrategy(SwitchStrategy):
                 return
 
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        t_begin = time.perf_counter()
         standby = pool.standby
         if standby is None or not standby.ready:
+            # a previous switch's standby rebuild may still be in flight —
+            # await it rather than failing (counts toward t_blocked)
+            standby = pool.wait_standby()
+        if standby is None or not standby.ready:
+            if self._standby_was_attempted(pool):
+                # the background rebuild failed (already surfaced as a
+                # BackgroundBuildFailed warning): availability wins over
+                # the Scenario-A mechanism — degrade to a B2-style warm
+                # build instead of taking the service down
+                return self._degraded_switch(pool, new_split, t_begin)
             raise RuntimeError(
                 "Scenario A requires the always-running standby pipeline")
         old = pool.active.split
         note = ""
+        requested = new_split
         if standby.split != new_split:
             # Scenario A can only jump to the configuration it pre-built;
             # surface the mismatch instead of silently rewriting the target.
@@ -245,12 +277,53 @@ class ScenarioAStrategy(SwitchStrategy):
                     f"{new_split}; switching to the standby")
             warnings.warn(note, StandbySplitMismatch)
             new_split = standby.split
-        t_switch = pool.activate(pool.standby_key)         # atomic swap
-        # background: rebuild the redundant pipeline for the *old* config
-        bg = pool.build_standby(old, owns_weights=self.owns_weights)
-        return SwitchReport("switch_a", old, new_split, downtime=t_switch,
-                            t_switch=t_switch, background_cost=bg,
-                            cache_hit=True, note=note)
+        t_switch = pool.try_activate(pool.standby_key)     # atomic swap
+        if t_switch is None:
+            # the standby was reaped between the readiness check and the
+            # swap (concurrent build landing + eviction): keep serving
+            return self._degraded_switch(pool, requested, t_begin)
+        rep = SwitchReport("switch_a", old, new_split, downtime=t_switch,
+                           t_switch=t_switch, cache_hit=True, note=note)
+        # background: rebuild the redundant pipeline for the *old* config on
+        # the build worker — the serving thread returns after the swap
+        ow = pool.resolve_standby_ownership(self.owns_weights)
+
+        def _done(handle):
+            rep.background_cost = handle.t_wall
+            rep.t_background_wall = handle.t_wall
+
+        pool.submit_build(old, owns_weights=ow, cold=ow, reuse=False,
+                          standby=True, on_done=_done)
+        rep.t_blocked = time.perf_counter() - t_begin
+        return rep
+
+    @staticmethod
+    def _standby_was_attempted(pool: PipelinePool) -> bool:
+        """True when a standby rebuild ever ran (it may have failed, or its
+        entry may since have been evicted under memory pressure) — degrade
+        gracefully in either case.  Never-configured stays a hard error: it
+        is a deployment mistake, not a runtime condition."""
+        return pool._standby_handle is not None
+
+    def _degraded_switch(self, pool: PipelinePool, new_split: int,
+                         t_begin: float) -> SwitchReport:
+        old = pool.active.split
+        note = ("standby unavailable (failed background rebuild or evicted "
+                "mid-switch); fell back to a warm build")
+        warnings.warn(note, StandbySplitMismatch)
+        t0 = time.perf_counter()
+        entry, _ = pool.ensure(new_split, owns_weights=False, cold=False)
+        t_build = time.perf_counter() - t0
+        t_switch = pool.activate(entry.key)
+        ow = pool.resolve_standby_ownership(self.owns_weights)
+        pool.submit_build(old, owns_weights=ow, cold=ow, reuse=False,
+                          standby=True)           # try to restore Scenario A
+        rep = SwitchReport("switch_a", old, new_split,
+                           downtime=t_build + t_switch, t_build=t_build,
+                           t_switch=t_switch, build_detail=entry.report,
+                           note=note)
+        rep.t_blocked = time.perf_counter() - t_begin
+        return rep
 
 
 @register_strategy("switch_b1")
@@ -269,7 +342,8 @@ class ScenarioB1Strategy(SwitchStrategy):
             pool.release(old_key)                          # reap old container
         return SwitchReport("switch_b1", old, new_split,
                             downtime=t_build + t_switch, t_build=t_build,
-                            t_switch=t_switch, build_detail=entry.report)
+                            t_switch=t_switch, build_detail=entry.report,
+                            t_blocked=t_build + t_switch)
 
 
 @register_strategy("switch_b2")
@@ -285,7 +359,8 @@ class ScenarioB2Strategy(SwitchStrategy):
         t_switch = pool.activate(entry.key)
         return SwitchReport("switch_b2", old, new_split,
                             downtime=t_build + t_switch, t_build=t_build,
-                            t_switch=t_switch, build_detail=entry.report)
+                            t_switch=t_switch, build_detail=entry.report,
+                            t_blocked=t_build + t_switch)
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +384,9 @@ class SwitchPoolStrategy(SwitchStrategy):
         self._bw_hist: collections.deque = collections.deque(maxlen=history)
         self._split_hist: collections.deque = collections.deque(maxlen=history)
         self._profile = None
+        # optimal_split memo per bandwidth, valid for one profile object
+        self._split_memo: Dict[float, int] = {}
+        self._split_memo_profile = None
 
     @property
     def spec(self) -> str:
@@ -334,6 +412,27 @@ class SwitchPoolStrategy(SwitchStrategy):
         if net is not None:
             self._bw_hist.append(net.bandwidth_mbps)
 
+    def _optimal_split_memo(self, bw: float) -> int:
+        """Memoised Eq.-1 optimum per bandwidth level.
+
+        Network traces revisit the same few levels constantly, so the
+        speculation hot path must not re-solve Eq. 1 on every switch.  The
+        memo is keyed to the profile's ``cache_token()`` (object identity +
+        invalidation version + unit count): a new profile from ``observe``,
+        an ``invalidate_cache()`` after in-place edits, or a structural
+        change all invalidate it wholesale.
+        """
+        token = self._profile.cache_token() \
+            if hasattr(self._profile, "cache_token") else id(self._profile)
+        if token != self._split_memo_profile:
+            self._split_memo.clear()
+            self._split_memo_profile = token
+        split = self._split_memo.get(bw)
+        if split is None:
+            split = optimal_split(self._profile, NetworkModel(bw)).split
+            self._split_memo[bw] = split
+        return split
+
     def predicted_splits(self, pool: PipelinePool) -> List[int]:
         """Top-k candidate splits, most likely first."""
         cur = pool.active.split if pool.active is not None else None
@@ -350,12 +449,13 @@ class SwitchPoolStrategy(SwitchStrategy):
                 guesses.append(max(0.1, 2.0 * bws[-1] - bws[-2]))
             guesses.extend(reversed(bws))         # recent levels, newest first
             for bw in guesses:
-                add(optimal_split(self._profile, NetworkModel(bw)).split)
+                add(self._optimal_split_memo(bw))
         for s in reversed(self._split_hist):      # recently-served splits
             add(s)
         return cands[:self.k]
 
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
+        t_begin = time.perf_counter()
         old = pool.active.split
         if pool.net is not None:
             bw = pool.net.bandwidth_mbps
@@ -364,42 +464,70 @@ class SwitchPoolStrategy(SwitchStrategy):
             if not self._bw_hist or self._bw_hist[-1] != bw:
                 self._bw_hist.append(bw)
         key = (new_split, self.owns_weights)
-        hit = pool.has(new_split, self.owns_weights)
-        if hit:                                   # predicted: pointer swap
-            t_switch = pool.activate(key)
-            t_build, detail = 0.0, None
-            downtime = t_switch
-        else:                                     # miss: B2-style warm build
+        hit, t_build, detail, note = False, 0.0, None, ""
+        if pool.has(new_split, self.owns_weights):
+            # predicted: pointer swap (guarded — a concurrently-landing
+            # build's eviction may reap the entry before the swap)
+            t_switch = pool.try_activate(key)
+            if t_switch is not None:
+                hit = True
+                downtime = t_switch
+        if not hit and pool.pending(new_split, self.owns_weights) is not None:
+            # the speculative build for exactly this key is in flight:
+            # await it instead of duplicating the work
             t0 = time.perf_counter()
-            entry, _ = pool.ensure(new_split, owns_weights=False, cold=False,
-                                   reuse=False)
+            entry = pool.wait(new_split, self.owns_weights)
             t_build = time.perf_counter() - t0
+            if entry is not None:
+                t_switch = pool.try_activate(entry.key)
+                if t_switch is not None:
+                    hit = True
+                    note = "awaited in-flight speculative build"
+                    detail = entry.report
+                    downtime = t_build + t_switch
+        if not hit:                               # miss: B2-style warm build
+            t0 = time.perf_counter()
+            entry, _ = pool.ensure(new_split, owns_weights=False,
+                                   cold=False, reuse=False)
+            t_build += time.perf_counter() - t0
             t_switch = pool.activate(entry.key)
             detail = entry.report
             downtime = t_build + t_switch
         self._split_hist.append(old)
-        bg = self._speculate(pool)
-        return SwitchReport(self.spec, old, new_split, downtime=downtime,
-                            t_build=t_build, t_switch=t_switch,
-                            background_cost=bg, build_detail=detail,
-                            cache_hit=hit)
+        rep = SwitchReport(self.spec, old, new_split, downtime=downtime,
+                           t_build=t_build, t_switch=t_switch,
+                           build_detail=detail, cache_hit=hit, note=note)
+        self._speculate(pool, rep)
+        rep.t_blocked = time.perf_counter() - t_begin
+        return rep
 
-    def _speculate(self, pool: PipelinePool) -> float:
-        """Background: pre-build predictions, drop stale speculation."""
+    def _speculate(self, pool: PipelinePool,
+                   report: Optional[SwitchReport] = None) -> None:
+        """Queue speculative pre-builds on the build worker; drop stale
+        speculation.  Build wall time lands on ``report.t_background_wall``
+        once each job completes (deterministically after ``pool.drain()``)."""
         want = self.predicted_splits(pool)
         for key in pool.keys():
             split, owned = key
             if owned and key != pool.active_key and key != pool.standby_key \
-                    and split not in want:
-                pool.release(key)
-        t = 0.0
+                    and split not in want \
+                    and pool.pending(split, owned) is None:
+                try:
+                    pool.release(key)
+                except ValueError:    # became active/in-flight meanwhile
+                    pass
+
+        def _done(handle):
+            if report is not None:
+                report.t_background_wall += handle.t_wall
+                report.background_cost += handle.t_wall
+
         for s in want:
-            if pool.has(s, self.owns_weights):
+            if pool.has(s, self.owns_weights) \
+                    or pool.pending(s, self.owns_weights) is not None:
                 continue
-            t0 = time.perf_counter()
-            pool.ensure(s, owns_weights=self.owns_weights,
-                        cold=self.owns_weights, reuse=True)
-            t += time.perf_counter() - t0
-        # speculation is best-effort: enforce the budget on what we built
-        pool.evict_to_budget()
-        return t
+            # speculation is best-effort: the job re-enforces the memory
+            # budget after it lands (enforce_budget=True)
+            pool.submit_build(s, owns_weights=self.owns_weights,
+                              cold=self.owns_weights, reuse=True,
+                              enforce_budget=True, on_done=_done)

@@ -17,6 +17,15 @@ instance) and caches one instance per spec so stateful strategies (e.g.
 ``switch_pool``'s bandwidth history) persist across switches.  See
 ``strategies.py`` for the strategy -> paper-equation mapping and
 ``available_strategies()`` for the live registry.
+
+Strategies defer standby rebuilds and speculation to the pool's
+background ``BuildExecutor``.  The facade keeps the deterministic
+semantics callers expect: ``repartition`` drains outstanding background
+builds *before* switching (modelling the serving gap between real
+bandwidth changes), so back-to-back calls behave exactly like the
+synchronous implementation while ``SwitchReport.t_blocked`` still shows
+only the pointer-swap cost.  Pass ``drain=False`` to measure overlapped
+switching explicitly, and call ``drain()`` for an explicit barrier.
 """
 from __future__ import annotations
 
@@ -86,8 +95,18 @@ class PipelineManager:
         return self._strategies[spec]
 
     def repartition(self, strategy: Union[str, SwitchStrategy],
-                    new_split: int) -> SwitchReport:
+                    new_split: int, *, drain: bool = True) -> SwitchReport:
+        if drain:
+            self.pool.drain()       # settle background builds first
         return self.get_strategy(strategy).switch(self.pool, new_split)
+
+    def drain(self, timeout=None) -> None:
+        """Barrier: wait for all background builds; surface their failures."""
+        self.pool.drain(timeout)
+
+    def close(self) -> None:
+        """Settle background work and stop the pool's build worker."""
+        self.pool.close()
 
     # -- seed-era conveniences ---------------------------------------------
     def build_standby(self, split: int) -> float:

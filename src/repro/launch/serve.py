@@ -46,6 +46,7 @@ def main():
     ctl = NeukonfigController(mgr, profile, trace, strategy=args.strategy)
     events = ctl.run(args.duration)
     _, timing = mgr.serve(inputs)
+    ctl.close()
     print(f"arch={cfg.name} strategy={args.strategy}")
     for e in events:
         if e.report:

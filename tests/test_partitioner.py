@@ -87,6 +87,77 @@ def test_memory_feasibility_filter():
     assert ok.split == 0     # only the first split fits
 
 
+@hypothesis.given(
+    st.lists(st.floats(1e-5, 0.5), min_size=3, max_size=16),
+    st.lists(st.floats(1e-5, 0.5), min_size=3, max_size=16),
+    st.lists(st.integers(0, 10_000_000), min_size=3, max_size=16),
+    st.floats(0.5, 100.0),
+)
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_prefix_sum_latency_matches_naive(edge_t, cloud_t, bbytes, bw):
+    """The O(n) prefix-sum latency_curve must agree with the naive O(n²)
+    per-split summation on every point, for random profiles."""
+    n = min(len(edge_t), len(cloud_t), len(bbytes))
+    p = _profile(edge_t[:n], cloud_t[:n], bbytes[:n])
+    net = NetworkModel(bw)
+    for cand in latency_curve(p, net):
+        s = cand.split
+        naive_e = sum(u.t_edge for u in p.units[:s + 1])
+        naive_c = sum(u.t_cloud for u in p.units[s + 1:])
+        naive_t = net.transfer_time(p.units[s].boundary_bytes)
+        assert cand.t_edge == pytest.approx(naive_e, rel=1e-9, abs=1e-12)
+        assert cand.t_cloud == pytest.approx(naive_c, rel=1e-9, abs=1e-12)
+        assert cand.t_transfer == pytest.approx(naive_t, rel=1e-9)
+        assert cand.total == pytest.approx(naive_e + naive_c + naive_t,
+                                           rel=1e-9)
+
+
+def test_prefix_cache_detects_unit_count_change_and_invalidation():
+    p = _profile([0.1, 0.2, 0.3], [0.05, 0.05, 0.05], [100, 100, 0])
+    net = NetworkModel(10.0)
+    te, _, tc = p.latency(1, net)
+    assert te == pytest.approx(0.3) and tc == pytest.approx(0.05)
+    # structural change (new unit) is detected automatically
+    p.units.append(UnitProfile("extra", 0.4, 0.4, 0))
+    te2, _, tc2 = p.latency(1, net)
+    assert tc2 == pytest.approx(0.45)
+    # in-place timing mutation needs the explicit invalidation hook
+    p.units[0].t_edge = 1.0
+    p.invalidate_cache()
+    te3, _, _ = p.latency(1, net)
+    assert te3 == pytest.approx(1.2)
+
+
+def test_switch_pool_optimal_split_memo_invalidates_on_profile_change():
+    """predicted_splits memoises optimal_split per (profile, bandwidth);
+    swapping the profile object must invalidate the memo."""
+    from repro.core.strategies import SwitchPoolStrategy
+
+    strat = SwitchPoolStrategy(k=1)
+    # profile A: optimum at a deep split under low bandwidth
+    a = _profile([0.001] * 5, [0.0005] * 5,
+                 [4_000_000, 2_000_000, 1_000_000, 100_000, 0])
+    strat._profile = a
+    sa = strat._optimal_split_memo(0.5)
+    assert sa == optimal_split(a, NetworkModel(0.5)).split
+    assert strat._split_memo                   # memo populated
+    # same bandwidth, same profile object: cached value
+    assert strat._optimal_split_memo(0.5) == sa
+    # profile B flips the cost structure: cloud much faster => shallow split
+    b = _profile([0.5] * 5, [0.0001] * 5, [100, 100, 100, 100, 0])
+    strat._profile = b
+    sb = strat._optimal_split_memo(0.5)
+    assert sb == optimal_split(b, NetworkModel(0.5)).split
+    assert sb != sa
+    assert strat._split_memo_profile == b.cache_token()  # rebound to b
+    # in-place mutation + invalidate_cache() must also invalidate the memo
+    for u in b.units:
+        u.t_edge = 1e-6
+    b.invalidate_cache()
+    sb2 = strat._optimal_split_memo(0.5)
+    assert sb2 == optimal_split(b, NetworkModel(0.5)).split
+
+
 def test_transformer_profile_structure():
     cfg = get_config("mixtral-8x22b")
     p = profile_transformer(cfg, seq=1024)

@@ -66,6 +66,23 @@ def test_pipeline_equals_monolithic_other_families(arch, rng):
         assert jnp.max(jnp.abs(out - ref)) < 1e-3, f"{arch} split {split}"
 
 
+def test_pipeline_serves_other_shapes_via_retrace_fallback(setup):
+    """AOT stage executables are specialized to the sample avals; a request
+    with a different shape must fall back to the retracing warm path, not
+    raise."""
+    cfg, runner, inputs = setup
+    mgr = PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                          sample_inputs=inputs)
+    other = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (1, 40), 0,
+                                          cfg.vocab_size)}
+    out, _ = mgr.serve(other)
+    assert out.shape[:2] == (1, 40)
+    ref = runner.run_units(other, 0, runner.num_units)["logits"]
+    assert jnp.max(jnp.abs(out - ref)) < 1e-4
+    out2, _ = mgr.serve(inputs)          # the original shape still serves
+    assert out2.shape[1] == inputs["tokens"].shape[1]
+
+
 def test_switch_preserves_service_output(setup):
     """After any repartition the pipeline must still compute the same
     function (only the split moved)."""

@@ -170,6 +170,7 @@ def test_switch_a_surfaces_standby_mismatch(setup):
         rep = mgr.repartition("switch_a", 0)  # standby was built for 2
     assert rep.new_split == 2 and rep.note    # switched to what exists
     assert mgr.active.split == 2
+    mgr.drain()                               # settle the standby rebuild
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +218,7 @@ def test_strategies_survive_zero_budget(setup):
     assert mgr.active.split == 1 and rep.downtime < 0.05
     out, _ = mgr.serve(inputs)
     assert out.shape[-1] == cfg.vocab_size
+    mgr.drain()                               # settle the standby rebuild
 
 
 def test_switch_pool_respects_memory_budget(setup):
@@ -225,6 +227,7 @@ def test_switch_pool_respects_memory_budget(setup):
     mgr = _mgr(runner, inputs, mem_budget_bytes=0)
     reps = [mgr.repartition("switch_pool(k=1)", s) for s in (2, 1, 2)]
     assert all(not r.cache_hit for r in reps)
+    mgr.drain()           # let trailing speculation land and be evicted
     assert mgr.memory_report()["additional_bytes"] == 0
 
 
