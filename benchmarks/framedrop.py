@@ -1,24 +1,33 @@
 """Paper Figs. 14-15: frame drop rate during t_downtime for different
 incoming FPS, per strategy, at 20 and 5 Mbps.
 
-Windows come from MEASURED SwitchReports (benchmarks/downtime.py machinery);
-the frame stream is replayed through the discrete-event simulator with the
-old pipeline's measured service time.
+Since the ServingEngine landed, the repartition window is MEASURED on a
+live virtual-clock request stream (one engine run per strategy/bandwidth
+at a reference fps): the switch really executes while requests are in
+flight, and the window length, in-window drop rate and steady service
+time all come from the resulting ``ServiceTimeline``.  The per-fps rows
+then replay that measured window through the analytic simulator
+(``simulate_window``), with the measured columns sitting next to the
+analytic ones — ``crosscheck_timeline`` ties the two together at the
+reference fps.
 """
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.downtime import _make_mgr
 from repro.configs import get_config
-from repro.core.downtime import simulate_window
+from repro.core.downtime import crosscheck_timeline, simulate_window
 from repro.core.network import NetworkModel
 from repro.core.strategies import benchmark_specs
 from repro.models import transformer as T
+from repro.serving import ServingEngine, VirtualClock, request_stream
 
 FPS_LIST = (1, 5, 10, 15, 30)
+REF_FPS = 10.0          # the fps the measured stream runs at
+T_SWITCH = 2.0          # stream time the repartition fires at
+DURATION = 8.0          # covers multi-second pause windows
 
 
 def run(arch="qwen2.5-3b"):
@@ -27,28 +36,45 @@ def run(arch="qwen2.5-3b"):
     rows = []
     for bw in (20.0, 5.0):
         for strat in benchmark_specs():
-            mgr, inputs = _make_mgr(cfg, params, 1)
+            mgr, inputs = _make_mgr(cfg, params, 1, warm_standbys=True)
             mgr.get_strategy(strat).prepare(mgr.pool, candidate_splits=(2, 1))
             mgr.set_network(NetworkModel(bw))
-            _, timing = mgr.serve(inputs)      # old-pipeline service time
-            rep = mgr.repartition(strat, 2)
+            mgr.serve(inputs)                  # absorb first-execution spike
+            _, timing = mgr.serve(inputs)      # steady-state service time
+            # the two serve() calls above already established steady state
+            eng = ServingEngine(mgr, clock=VirtualClock(), warmup=False)
+            eng.schedule_switch(T_SWITCH, strat, 2)
+            tl = eng.run(request_stream(inputs, fps=REF_FPS,
+                                        duration=DURATION))
             mgr.close()       # settle background builds, stop the worker
+            w = tl.windows[0]
+            (xc,) = crosscheck_timeline(tl, fps=REF_FPS,
+                                        service_time=timing.t_edge)
             for fps in FPS_LIST:
-                sim = simulate_window(fps=fps, window=rep.downtime,
+                sim = simulate_window(fps=fps, window=w.duration,
                                       service_time=timing.t_edge,
-                                      full_outage=rep.full_outage,
-                                      horizon=max(rep.downtime, 1.0))
+                                      full_outage=w.full_outage,
+                                      horizon=max(w.duration, 1.0))
                 rows.append({
                     "name": f"{arch}/{strat}@{int(bw)}mbps/fps{fps}",
                     "value": round(sim.drop_rate, 4),
-                    "window_ms": round(rep.downtime * 1e3, 2),
+                    "window_ms": round(w.duration * 1e3, 2),
                     "arrived": sim.arrived,
                     "dropped": sim.dropped,
+                    # measured on the live stream at REF_FPS
+                    "measured_fps": REF_FPS,
+                    "measured_drop_rate": round(
+                        xc["measured_drop_rate"], 4),
+                    "predicted_drop_rate": round(
+                        xc["predicted_drop_rate"], 4),
+                    "measured_run_drop_rate": round(tl.drop_rate, 4),
                 })
             last = [r for r in rows[-len(FPS_LIST):]]
-            print(f"# {strat:17s}@{int(bw):2d}mbps window "
-                  f"{rep.downtime*1e3:8.1f}ms drop rates "
-                  + " ".join(f"{r['value']:.2f}" for r in last))
+            print(f"# {strat:17s}@{int(bw):2d}mbps measured window "
+                  f"{w.duration*1e3:8.1f}ms drop rates "
+                  + " ".join(f"{r['value']:.2f}" for r in last)
+                  + f" | stream@{int(REF_FPS)}fps "
+                    f"{last[0]['measured_drop_rate']:.2f} in-window")
     emit(rows, f"fig14_15_framedrop_{arch}")
     return rows
 

@@ -1,5 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole test suite, fail-fast, then the fast
+# Tier-1 verification: the whole test suite (fail-fast, suite-wide
+# per-test timeout so concurrency tests fail instead of hanging), then
+# the ServingEngine measured-stream smoke (fatal: the paper's downtime
+# ordering must hold on a live request stream), then the fast
 # switch-path microbenchmark smoke (records the perf trajectory in
 # BENCH_switch.json every run; non-fatal so perf noise can't mask a
 # green test suite).  Set SKIP_BENCH=1 to run tests only.
@@ -8,6 +11,8 @@ set -euo pipefail
 cd "$(dirname "$0")"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.serving --smoke
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python benchmarks/switch_micro.py --smoke \
         || echo "WARN: switch_micro smoke failed (non-fatal)" >&2

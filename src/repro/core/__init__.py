@@ -4,7 +4,8 @@ from repro.core.controller import (CooldownPolicy, HysteresisPolicy,
                                    ImmediatePolicy, NeukonfigController,
                                    RepartitionEvent, RepartitionPolicy,
                                    get_policy)
-from repro.core.downtime import SimResult, simulate_window, sweep_fps
+from repro.core.downtime import (SimResult, crosscheck_timeline,
+                                 simulate_window, sweep_fps)
 from repro.core.executor import (BackgroundBuildFailed, BuildExecutor,
                                  BuildHandle)
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, ICI_LINK_BW, TPU_V5E

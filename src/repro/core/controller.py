@@ -1,18 +1,28 @@
 """NeukonfigController: ties monitor -> partitioner -> strategy together.
 
-Drives a scripted bandwidth trace: on every detected change it recomputes
-the optimal split (Eq. 1) and asks its ``RepartitionPolicy`` whether to
-act; if so it repartitions with the configured ``SwitchStrategy`` (any
-registry spec, e.g. ``"switch_b2"`` or ``"switch_pool(k=2)"``).  The
-strategy's ``observe`` hook is fed every network sample plus the model
-profile, which is how predictive strategies learn the bandwidth trend.
+The controller is an **event-driven participant of the serving engine**:
+network changes arrive as stream-clock events (the trace's change points,
+scheduled by ``repro.serving.engine.ServingEngine`` or by the stand-alone
+``run()``), and each event recomputes the optimal split (Eq. 1), asks the
+``RepartitionPolicy`` whether to act, and — if so — repartitions with the
+configured ``SwitchStrategy`` (any registry spec, e.g. ``"switch_b2"`` or
+``"switch_pool(k=2)"``).  When attached to an engine the switch goes
+through ``engine.execute_switch`` so the repartition happens *while
+requests are in flight* and its measured wall duration blocks the request
+stream; detached, the strategy is invoked directly (the legacy
+control-only path).  The strategy's ``observe`` hook is fed every network
+sample plus the model profile, which is how predictive strategies learn
+the bandwidth trend (engines can add denser ``observe_dt`` sampling ticks
+between change points).
 
 Strategies run background builds (standby rebuilds, speculation) on the
 pool's ``BuildExecutor``.  The controller owns the await points: before a
-repartition it drains outstanding builds — the poll interval is *virtual*
-time, so "the background build finished during the gap" is the semantics
-a real deployment would see — and ``run()`` drains once more at the end
-so callers observe a settled pool.
+detached repartition it drains outstanding builds — the gap between
+network events is seconds of stream time, so "the background build
+finished during the gap" is the semantics a real deployment would see —
+and ``run()`` drains once more at the end so callers observe a settled
+pool.  (An engine owns that drain itself: ``overlap=True`` leaves builds
+in flight across switches to measure the overlapped path.)
 
 Policies (the paper repartitions on *every* change; the others are the
 repartition-frequency control its section VI leaves as future work):
@@ -138,8 +148,11 @@ class NeukonfigController:
             policy = HysteresisPolicy(min_gain) if min_gain > 0 \
                 else ImmediatePolicy()
         self.policy = get_policy(policy)
+        # retained as the default observe-tick spacing an engine uses when
+        # it wants denser strategy.observe sampling between change events
         self.poll_dt = poll_dt
         self.events: List[RepartitionEvent] = []
+        self._engine = None
         if candidate_splits is None:
             # the trace's operating points mapped through Eq. 1 — what a
             # deployment knows up front
@@ -147,8 +160,27 @@ class NeukonfigController:
                                        for t, _ in trace.steps})
         self.strategy.prepare(mgr.pool, candidate_splits=candidate_splits)
 
-    def step(self, t: float) -> Optional[RepartitionEvent]:
-        """Poll the network at virtual time t; repartition if needed."""
+    # -- engine participation ----------------------------------------------
+    def attach(self, engine) -> None:
+        """Become a participant of a ServingEngine: switches now go through
+        ``engine.execute_switch`` so they are measured on the stream."""
+        self._engine = engine
+
+    def network_events(self, duration: float) -> List[float]:
+        """Stream-clock times at which network changes arrive: the trace's
+        change points, plus t=0 to prime the monitor's baseline sample."""
+        return [0.0] + [t for t in self.monitor.trace.change_points()
+                        if t <= duration]
+
+    def observe_tick(self, t: float) -> None:
+        """Feed the strategy a network sample without change detection
+        (an engine's optional denser sampling between change events)."""
+        self.strategy.observe(self.mgr.pool, net=self.monitor.sample(t),
+                              profile=self.profile)
+
+    def on_network_event(self, t: float) -> Optional[RepartitionEvent]:
+        """Handle one network event at stream time ``t``: detect the
+        change, consult the policy, repartition if warranted."""
         net = self.monitor.poll(t)
         if net is None:
             return None
@@ -160,19 +192,32 @@ class NeukonfigController:
                                        profile=self.profile, net=net)
         ev = RepartitionEvent(t, net.bandwidth_mbps, current, best.split, None)
         if do:
-            # await background builds first: poll gaps are virtual seconds,
-            # far longer than a build, so by repartition time they are done
-            self.mgr.pool.drain()
-            ev.report = self.strategy.switch(self.mgr.pool, best.split)
+            if self._engine is not None:
+                # measured path: the engine charges the switch's wall time
+                # to the stream clock and drains in-flight requests on the
+                # old pipeline
+                ev.report = self._engine.execute_switch(self.strategy,
+                                                        best.split)
+            else:
+                # detached path: await background builds first — event gaps
+                # are stream seconds, far longer than a build, so by
+                # repartition time they are done
+                self.mgr.pool.drain()
+                ev.report = self.strategy.switch(self.mgr.pool, best.split)
             self.policy.notify_switched(t)
         self.events.append(ev)
         return ev
 
+    def step(self, t: float) -> Optional[RepartitionEvent]:
+        """Back-compat alias for ``on_network_event``."""
+        return self.on_network_event(t)
+
     def run(self, duration: float) -> List[RepartitionEvent]:
-        t = 0.0
-        while t <= duration:
-            self.step(t)
-            t += self.poll_dt
+        """Control-only run: replay the trace's network events with no
+        request traffic.  For a measured request stream, attach to a
+        ``ServingEngine`` and call ``engine.run`` instead."""
+        for t in self.network_events(duration):
+            self.on_network_event(t)
         self.mgr.pool.drain()       # settle trailing background builds
         return self.events
 

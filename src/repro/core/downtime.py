@@ -1,6 +1,13 @@
-"""Frame-stream serving simulator: downtime -> frame drops (Figs. 14-15).
+"""Analytic frame-drop model — the cross-check for measured timelines.
 
-Virtual-clock discrete-event simulation fed with MEASURED costs:
+Since the ServingEngine landed (``repro.serving.engine``), downtime and
+drop rates are **measured** on a live request stream and recorded in a
+``ServiceTimeline``; this module's closed-form simulator is kept as an
+independent prediction to cross-check those measurements against
+(``crosscheck_timeline``) and for quick what-if sweeps (`sweep_fps`)
+without running a stream.
+
+The simulator replays a single repartition window analytically:
 * per-frame edge occupancy = measured stage-edge wall time (scaled to the
   edge spec) — frames pipeline, so the edge is the admission bottleneck;
 * repartition windows = measured SwitchReport downtimes.
@@ -16,7 +23,7 @@ Drop rules (matching the paper's semantics):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -64,3 +71,38 @@ def sweep_fps(fps_list, *, window, service_time, full_outage
               ) -> List[SimResult]:
     return [simulate_window(fps=f, window=window, service_time=service_time,
                             full_outage=full_outage) for f in fps_list]
+
+
+def crosscheck_timeline(timeline, *, fps: float, service_time: float
+                        ) -> List[Dict[str, float]]:
+    """Compare a measured ``ServiceTimeline`` against this simulator.
+
+    For every switch window the timeline recorded, predict arrivals and
+    drops analytically (``simulate_window`` over the *measured* window
+    length) and set them next to what the stream actually measured.  The
+    two are independent paths to the same number — the engine counts real
+    admitted requests, the simulator integrates a closed-form arrival
+    process — so agreement within a request or two of boundary slack
+    validates both.  ``timeline`` is duck-typed (needs ``windows``,
+    ``arrivals_in``, ``drops_in``).
+    """
+    out: List[Dict[str, float]] = []
+    for w in timeline.windows:
+        sim = simulate_window(fps=fps, window=w.duration,
+                              service_time=service_time,
+                              full_outage=w.full_outage,
+                              horizon=max(w.duration, 1e-9))
+        arrived = len(timeline.arrivals_in(w.t_start, w.t_end))
+        dropped = len(timeline.drops_in(w.t_start, w.t_end))
+        out.append({
+            "strategy": w.strategy,
+            "window_s": w.duration,
+            "full_outage": w.full_outage,
+            "measured_arrived": arrived,
+            "measured_dropped": dropped,
+            "measured_drop_rate": dropped / arrived if arrived else 0.0,
+            "predicted_arrived": sim.arrived,
+            "predicted_dropped": sim.dropped,
+            "predicted_drop_rate": sim.drop_rate,
+        })
+    return out

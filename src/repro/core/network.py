@@ -60,13 +60,23 @@ class NetworkMonitor:
     _last_bw: Optional[float] = None
     _last_change_t: float = -1e9
 
+    def sample(self, t: float) -> NetworkModel:
+        """The link state at ``t`` without change detection (observe ticks)."""
+        return self.trace.at(t)
+
     def poll(self, t: float) -> Optional[NetworkModel]:
         """Returns the new NetworkModel if a significant change happened."""
         net = self.trace.at(t)
         if self._last_bw is None:
             self._last_bw = net.bandwidth_mbps
             return None
-        rel = abs(net.bandwidth_mbps - self._last_bw) / self._last_bw
+        delta = abs(net.bandwidth_mbps - self._last_bw)
+        if self._last_bw == 0.0:
+            # a trace step to 0 Mbps is a link outage; any recovery from it
+            # is an infinitely large relative change, not a crash
+            rel = float("inf") if delta else 0.0
+        else:
+            rel = delta / self._last_bw
         if rel > self.rel_threshold and (t - self._last_change_t) >= self.hysteresis_s:
             self._last_bw = net.bandwidth_mbps
             self._last_change_t = t

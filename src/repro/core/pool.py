@@ -83,6 +83,7 @@ class PipelinePool:
                  *, checkpoint_path: Optional[str] = None,
                  mem_budget_bytes: Optional[int] = None,
                  standby_owns_weights: bool = True,
+                 warm_standbys: bool = False,
                  max_entries: int = 16,
                  executor: Optional[BuildExecutor] = None):
         self.runner = runner
@@ -90,6 +91,12 @@ class PipelinePool:
         self.sample_inputs = sample_inputs
         self.mem_budget_bytes = mem_budget_bytes
         self.standby_owns_weights = standby_owns_weights
+        # the paper's Scenario-A standby is an *always-running* container:
+        # warm_standbys=True runs one throwaway forward after each standby
+        # build so the first live request after a swap sees steady-state
+        # latency (the serving engine's measured streams enable this;
+        # default off to keep unit-test pools cheap)
+        self.warm_standbys = warm_standbys
         self.max_entries = max_entries
         self._entries: Dict[PoolKey, PoolEntry] = {}
         self._clock = 0
@@ -149,6 +156,27 @@ class PipelinePool:
     def active(self) -> Optional[EdgeCloudPipeline]:
         e = self._entries.get(self.active_key) if self.active_key else None
         return e.pipeline if e else None
+
+    def snapshot_active(self) -> Optional[PoolEntry]:
+        """Atomic read of the active entry for request admission.
+
+        The serving engine's admission hot path must never observe a
+        half-switched pool: the key lookup, entry resolution and LRU touch
+        happen under the pool lock, the same lock ``activate`` swaps the
+        pointer under.  The returned entry stays alive for the admitted
+        request even if a switch replaces it immediately afterwards —
+        eviction never reaps the active entry, and a pointer swap only
+        *changes* which entry that is, so the snapshot's pipeline remains
+        built until the pool explicitly releases it (in-flight requests
+        drain on the old pipeline).
+        """
+        with self._lock:
+            if self.active_key is None:
+                return None
+            e = self._entries.get(self.active_key)
+            if e is not None:
+                self._touch(e)
+            return e
 
     @property
     def standby(self) -> Optional[EdgeCloudPipeline]:
@@ -216,7 +244,12 @@ class PipelinePool:
         t0 = time.perf_counter()
         entry, _ = self.ensure(split, owns_weights=ow, cold=ow, reuse=False)
         with self._lock:
+            # arm the standby BEFORE warming: eviction treats the standby
+            # as the last resort, so a concurrently-landing build's budget
+            # pass won't close the pipeline mid-warm
             self.standby_key = entry.key
+        if self.warm_standbys:
+            entry.pipeline.warm(self.sample_inputs)
         return time.perf_counter() - t0
 
     # -- background builds -------------------------------------------------
@@ -267,8 +300,14 @@ class PipelinePool:
                         # become the active key between submit and run —
                         # e.g. a mismatch switch activating the standby.)
                         return self._entries[key]
-                entry, _ = self.ensure(split, owns_weights=owns_weights,
-                                       cold=cold, reuse=reuse)
+                entry, hit = self.ensure(split, owns_weights=owns_weights,
+                                         cold=cold, reuse=reuse)
+                if standby and self.warm_standbys and not hit:
+                    # "always-running" standby: absorb the first-execution
+                    # spike on the worker, not on the first post-swap
+                    # request (the key is pending, so eviction can't reap
+                    # the entry mid-warm; a cache hit was already warmed)
+                    entry.pipeline.warm(self.sample_inputs)
                 with self._lock:
                     if standby and entry.key != self.active_key:
                         self.standby_key = entry.key
@@ -359,7 +398,12 @@ class PipelinePool:
 
     # -- activation / teardown ---------------------------------------------
     def activate(self, key: PoolKey) -> float:
-        """Atomic pointer swap to an already-built pipeline; returns t_switch."""
+        """Atomic pointer swap to an already-built pipeline; returns t_switch.
+
+        Atomic w.r.t. in-flight admission: the swap happens under the same
+        lock ``snapshot_active`` reads under, so the serving engine either
+        admits against the old pipeline (and drains on it) or against the
+        new one — never a torn state."""
         with self._lock:
             entry = self._entries[key]
             assert entry.pipeline.ready, f"pipeline {key} not built"

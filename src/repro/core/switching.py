@@ -45,11 +45,13 @@ class PipelineManager:
                  sample_inputs, *, checkpoint_path: Optional[str] = None,
                  standby_split: Optional[int] = None,
                  standby_owns_weights: bool = True,
+                 warm_standbys: bool = False,
                  mem_budget_bytes: Optional[int] = None):
         self.pool = PipelinePool(runner, net, sample_inputs,
                                  checkpoint_path=checkpoint_path,
                                  mem_budget_bytes=mem_budget_bytes,
-                                 standby_owns_weights=standby_owns_weights)
+                                 standby_owns_weights=standby_owns_weights,
+                                 warm_standbys=warm_standbys)
         entry, _ = self.pool.ensure(split, cold=False)
         self.pool.activate(entry.key)
         self._strategies: Dict[str, SwitchStrategy] = {}
@@ -113,9 +115,14 @@ class PipelineManager:
         return self.pool.build_standby(split)
 
     def serve(self, inputs):
-        if self.pool.active is None:
+        """One-shot synchronous request (seed API).  For a measured request
+        stream — admission queue, pipelined stage workers, a timeline that
+        derives downtime from the stream — drive this manager through
+        ``repro.serving.engine.ServingEngine`` instead."""
+        entry = self.pool.snapshot_active()
+        if entry is None:
             raise RuntimeError("service outage: pipeline paused")
-        return self.pool.active.process(inputs)
+        return entry.pipeline.process(inputs)
 
     def set_network(self, net: NetworkModel):
         self.pool.set_network(net)

@@ -1,1 +1,8 @@
+"""Serving layer: the request-stream ServingEngine (measured downtime on a
+live stream — see ``engine``) plus the conventional KV-cache batching
+server used by the serve example (``server``)."""
+from repro.serving.clock import Clock, VirtualClock, WallClock
+from repro.serving.engine import ServingEngine, StageWorker, request_stream
 from repro.serving.server import BatchingServer, Request
+from repro.serving.timeline import (RequestRecord, ServiceTimeline,
+                                    SwitchWindow)

@@ -1,0 +1,19 @@
+"""CLI entry for the serving package: ``python -m repro.serving --smoke``.
+
+Lives here (not in engine.py's ``__main__`` guard) so the smoke runs the
+canonical ``repro.serving.engine`` module instead of runpy re-executing
+it as a second copy of every class.
+"""
+import argparse
+
+from repro.serving.engine import _smoke
+
+ap = argparse.ArgumentParser(
+    description="ServingEngine measured-stream smoke")
+ap.add_argument("--smoke", action="store_true",
+                help="tiny deterministic run asserting the measured "
+                     "downtime ordering")
+args = ap.parse_args()
+if not args.smoke:
+    ap.error("only --smoke is supported as a direct invocation")
+raise SystemExit(_smoke())

@@ -1,0 +1,75 @@
+"""Pluggable stream clocks for the ServingEngine.
+
+The engine is written against one clock interface so the same event loop
+serves two modes:
+
+* ``WallClock`` — live mode: ``sleep_until`` really sleeps, and work done
+  on the serving thread (a repartition, a stage forward) consumes wall
+  time by itself, so ``charge`` is a no-op.
+* ``VirtualClock`` — deterministic test/benchmark mode: ``sleep_until``
+  jumps, and ``charge(dt)`` replays a *measured* wall-clock cost onto the
+  stream clock.  This is how the engine measures downtime on a virtual
+  request stream: the switch really runs (real compile, real checkpoint
+  reload), its real duration is measured, and that duration blocks the
+  stream — nothing is derived from analytic formulas.
+"""
+from __future__ import annotations
+
+import time
+
+
+class Clock:
+    """Stream-time source the ServingEngine schedules against."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def sleep_until(self, t: float) -> None:
+        """Advance to ``t`` (no-op if ``t`` is already in the past)."""
+        raise NotImplementedError
+
+    def charge(self, dt: float) -> None:
+        """Account ``dt`` seconds of measured on-thread work (e.g. a
+        switch that blocked the serving loop) on the stream clock."""
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    """Real time: the stream clock is the process monotonic clock."""
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def sleep_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+    def charge(self, dt: float) -> None:
+        """No-op: on-thread work already consumed real time."""
+
+
+class VirtualClock(Clock):
+    """Deterministic stream time: advances only via the engine's events
+    and explicit ``charge``s of measured work."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep_until(self, t: float) -> None:
+        if t > self._t:
+            self._t = float(t)
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"cannot rewind the clock ({dt=})")
+        self._t += float(dt)
+
+    def charge(self, dt: float) -> None:
+        self.advance(max(0.0, dt))

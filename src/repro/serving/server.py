@@ -65,8 +65,13 @@ class BatchingServer:
         steps = max(r.max_new_tokens for r in reqs)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         for i, r in enumerate(reqs):
-            r.output.append(int(tok[i, 0]))
+            if not r.done:
+                r.output.append(int(tok[i, 0]))
         for _ in range(steps - 1):
+            if all(r.done for r in reqs):
+                # e.g. resumed requests arriving with partial output: no
+                # reason to burn `steps - 1` decode steps on a done batch
+                break
             logits, cache = self._decode(self.params, tok, cache)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             for i, r in enumerate(reqs):

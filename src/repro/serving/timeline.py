@@ -1,0 +1,169 @@
+"""ServiceTimeline: the measured record of a request stream.
+
+Every request the ServingEngine admits leaves a ``RequestRecord`` (admit /
+serve / drop, with stage timings and the split that served it), and every
+repartition leaves a ``SwitchWindow`` stamped with the *measured* interval
+during which the stream was impacted.  All service metrics — downtime,
+drop rate, latency percentiles — are **derived from these records**, not
+from analytic formulas; ``core/downtime.simulate_window`` survives only as
+a cross-check against this measured timeline (see
+``core.downtime.crosscheck_timeline``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    """One request's life on the stream clock."""
+    rid: int
+    t_arrival: float
+    t_start: Optional[float] = None     # edge stage entry
+    t_done: Optional[float] = None      # cloud stage exit
+    split: Optional[int] = None         # split of the pipeline that served it
+    drop_reason: Optional[str] = None   # "outage" | "busy" | "queue_full"
+    drained_in_switch: bool = False     # completed on the old pipeline while
+                                        # a repartition replaced it
+
+    @property
+    def served(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def dropped(self) -> bool:
+        return self.drop_reason is not None
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_arrival
+
+
+@dataclass
+class SwitchWindow:
+    """Measured stream-clock interval one repartition impacted the stream."""
+    t_start: float
+    t_end: float
+    strategy: str
+    full_outage: bool
+    old_split: Optional[int]
+    new_split: int
+    drained: int = 0                    # in-flight requests drained on the
+                                        # old pipeline during the switch
+    analytic_downtime: float = 0.0      # SwitchReport.downtime, for the
+                                        # measured-vs-analytic comparison
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+
+class ServiceTimeline:
+    """Accumulates the stream's records and derives service metrics."""
+
+    def __init__(self):
+        self.records: List[RequestRecord] = []
+        self.windows: List[SwitchWindow] = []
+        self.t_end: Optional[float] = None      # stamped by the engine at
+                                                # end of run
+
+    # -- recording (engine-facing) ----------------------------------------
+    def admit(self, rid: int, t: float) -> RequestRecord:
+        rec = RequestRecord(rid, t)
+        self.records.append(rec)
+        return rec
+
+    def drop(self, rec: RequestRecord, reason: str) -> None:
+        rec.drop_reason = reason
+
+    def serve(self, rec: RequestRecord, *, t_start: float, t_done: float,
+              split: int) -> None:
+        rec.t_start, rec.t_done, rec.split = t_start, t_done, split
+
+    def record_switch(self, window: SwitchWindow) -> None:
+        self.windows.append(window)
+
+    def finish(self, t: float) -> None:
+        self.t_end = t
+
+    # -- derived metrics ---------------------------------------------------
+    @property
+    def arrived(self) -> int:
+        return len(self.records)
+
+    @property
+    def served_count(self) -> int:
+        return sum(1 for r in self.records if r.served)
+
+    @property
+    def dropped_count(self) -> int:
+        return sum(1 for r in self.records if r.dropped)
+
+    @property
+    def drop_rate(self) -> float:
+        return self.dropped_count / self.arrived if self.arrived else 0.0
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray([r.latency for r in self.records if r.served],
+                          dtype=np.float64)
+
+    def percentile(self, p: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, p)) if lat.size else float("nan")
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    def downtime(self) -> float:
+        """Total measured stream time impacted by switches (Σ windows)."""
+        return sum(w.duration for w in self.windows)
+
+    def downtime_by_strategy(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for w in self.windows:
+            out[w.strategy] = out.get(w.strategy, 0.0) + w.duration
+        return out
+
+    def arrivals_in(self, t0: float, t1: float) -> List[RequestRecord]:
+        return [r for r in self.records if t0 <= r.t_arrival < t1]
+
+    def drops_in(self, t0: float, t1: float,
+                 reason: Optional[str] = None) -> List[RequestRecord]:
+        return [r for r in self.arrivals_in(t0, t1) if r.dropped
+                and (reason is None or r.drop_reason == reason)]
+
+    def switch_drops(self, wake: float = 0.0) -> int:
+        """Drops attributable to switching: arrivals inside a switch
+        window or its wake (within ``wake`` seconds after it) — as
+        opposed to steady-state noise spikes elsewhere in the stream."""
+        return sum(len(self.drops_in(w.t_start, w.t_end + wake))
+                   for w in self.windows)
+
+    def outage_bounds(self) -> Optional[tuple]:
+        """Derive the outage interval purely from the request stream: the
+        arrival span of requests dropped for "outage".  Cross-checks the
+        engine-stamped window without trusting it."""
+        ts = [r.t_arrival for r in self.records if r.drop_reason == "outage"]
+        return (min(ts), max(ts)) if ts else None
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "arrived": self.arrived,
+            "served": self.served_count,
+            "dropped": self.dropped_count,
+            "drop_rate": round(self.drop_rate, 4),
+            "downtime_ms": round(self.downtime() * 1e3, 3),
+            "n_switches": len(self.windows),
+            "p50_ms": round(self.p50 * 1e3, 3),
+            "p99_ms": round(self.p99 * 1e3, 3),
+            "drained_in_switch": sum(1 for r in self.records
+                                     if r.drained_in_switch),
+        }

@@ -1,3 +1,5 @@
+import signal
+
 import jax
 import pytest
 
@@ -5,7 +7,66 @@ import pytest
 # ONLY for launch/dryrun.py, which must run in its own process).
 jax.config.update("jax_enable_x64", False)
 
+try:                                    # suite-wide test deadline
+    import pytest_timeout               # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+if not _HAVE_PYTEST_TIMEOUT:
+    # Fallback enforcement of the `timeout` ini option (pyproject.toml) on
+    # environments without the pytest-timeout plugin: concurrency tests
+    # (engine/executor drains, waits on build handles) must FAIL loudly,
+    # not hang the suite.  SIGALRM interrupts the main test thread, which
+    # is where pytest runs test bodies.
+
+    def pytest_addoption(parser):
+        parser.addini("timeout", "per-test timeout in seconds "
+                                 "(pytest-timeout fallback)", default=None)
+
+    if hasattr(signal, "SIGALRM"):
+        def _guarded(item, phase):
+            """Arm a SIGALRM deadline around one runtest phase (fixture
+            setup and teardown can deadlock in pool.wait()/drain() just
+            like test bodies, so all three phases are covered)."""
+            try:
+                limit = float(item.config.getini("timeout") or 0)
+            except (TypeError, ValueError):
+                limit = 0.0
+            if limit <= 0:
+                return None, 0.0
+
+            def _alarm(signum, frame):
+                raise TimeoutError(
+                    f"test {phase} exceeded the suite-wide {limit:.0f}s "
+                    f"timeout (fallback enforcement; install "
+                    f"pytest-timeout for the full plugin)")
+
+            old = signal.signal(signal.SIGALRM, _alarm)
+            signal.setitimer(signal.ITIMER_REAL, limit)
+            return old, limit
+
+        def _disarm(old):
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, old)
+
+        def _phase_wrapper(phase):
+            @pytest.hookimpl(hookwrapper=True)
+            def wrapper(item):
+                old, limit = _guarded(item, phase)
+                try:
+                    yield
+                finally:
+                    if limit > 0:
+                        _disarm(old)
+            return wrapper
+
+        pytest_runtest_setup = _phase_wrapper("setup")
+        pytest_runtest_call = _phase_wrapper("call")
+        pytest_runtest_teardown = _phase_wrapper("teardown")

@@ -26,6 +26,30 @@ def test_batching_server_decodes():
     assert all(0 <= t < cfg.vocab_size for v in out.values() for t in v)
 
 
+def test_batching_server_breaks_decode_loop_when_all_done():
+    """Resumed requests arriving with partial output must not burn the full
+    ``steps - 1`` decode iterations once every request is done."""
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    srv = BatchingServer(cfg, params, max_seq=64)
+    calls = {"n": 0}
+    real_decode = srv._decode
+
+    def counting_decode(*a, **kw):
+        calls["n"] += 1
+        return real_decode(*a, **kw)
+
+    srv._decode = counting_decode
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, (6,)),
+                    max_new_tokens=8, output=[1] * 7),     # needs 1 token
+            Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, (5,)),
+                    max_new_tokens=8, output=[2] * 8)]     # already done
+    out = srv.run_batch(reqs)
+    assert calls["n"] == 0          # prefill finished both; loop broke out
+    assert len(out[0]) == 8 and out[1] == [2] * 8
+
+
 def test_frame_source_rate():
     cfg = get_config("qwen2.5-3b").reduced()
     src = FrameSource(cfg, fps=10, seq=8)

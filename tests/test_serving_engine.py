@@ -1,0 +1,328 @@
+"""ServingEngine: measured request streams, clocks, timeline derivations,
+event-driven controller participation, and the overlapped switch paths."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import (BandwidthTrace, NetworkModel, NetworkMonitor,
+                        NeukonfigController, PipelineManager, StageRunner,
+                        crosscheck_timeline)
+from repro.core.pipeline import EdgeCloudPipeline
+from repro.core.profiler import ModelProfile, UnitProfile
+from repro.models import transformer as T
+from repro.serving import (ServiceTimeline, ServingEngine, SwitchWindow,
+                           VirtualClock, WallClock, request_stream)
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_advances_and_charges():
+    clk = VirtualClock()
+    assert clk.now() == 0.0
+    clk.sleep_until(2.0)
+    assert clk.now() == 2.0
+    clk.sleep_until(1.0)            # no time travel backwards
+    assert clk.now() == 2.0
+    clk.charge(0.5)                 # measured work lands on the stream
+    assert clk.now() == pytest.approx(2.5)
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+def test_wall_clock_sleeps_and_charge_is_free():
+    clk = WallClock()
+    t0 = clk.now()
+    clk.sleep_until(t0 + 0.02)
+    assert clk.now() >= t0 + 0.02
+    before = clk.now()
+    clk.charge(10.0)                # wall work already consumed real time
+    assert clk.now() - before < 1.0
+
+
+# ---------------------------------------------------------------------------
+# timeline derivations (synthetic, no pipelines)
+# ---------------------------------------------------------------------------
+
+def test_timeline_derives_metrics_from_records():
+    tl = ServiceTimeline()
+    r1 = tl.admit(0, 0.0)
+    tl.serve(r1, t_start=0.0, t_done=0.1, split=1)
+    r2 = tl.admit(1, 0.5)
+    tl.drop(r2, "busy")
+    r3 = tl.admit(2, 1.0)
+    tl.serve(r3, t_start=1.1, t_done=1.4, split=2)
+    tl.record_switch(SwitchWindow(0.9, 1.1, "switch_b2", False, 1, 2,
+                                  drained=1, analytic_downtime=0.15))
+    tl.finish(2.0)
+    assert tl.arrived == 3 and tl.served_count == 2 and tl.dropped_count == 1
+    assert tl.drop_rate == pytest.approx(1 / 3)
+    assert tl.downtime() == pytest.approx(0.2)
+    assert tl.downtime_by_strategy() == {"switch_b2": pytest.approx(0.2)}
+    # latencies: 0.1 and 0.4 (queueing included)
+    assert tl.p50 == pytest.approx(0.25)
+    assert tl.p99 >= tl.p50
+    assert tl.outage_bounds() is None           # no outage drops recorded
+    assert [r.rid for r in tl.drops_in(0.0, 2.0)] == [1]
+    s = tl.summary()
+    assert s["n_switches"] == 1 and s["dropped"] == 1
+
+
+def test_timeline_outage_bounds_derived_from_drops():
+    tl = ServiceTimeline()
+    for i, t in enumerate((0.0, 1.0, 1.2, 1.4, 2.0)):
+        r = tl.admit(i, t)
+        if 1.0 <= t < 1.5:
+            tl.drop(r, "outage")
+        else:
+            tl.serve(r, t_start=t, t_done=t + 0.05, split=1)
+    lo, hi = tl.outage_bounds()
+    assert lo == pytest.approx(1.0) and hi == pytest.approx(1.4)
+
+
+# ---------------------------------------------------------------------------
+# NetworkMonitor outage robustness (satellite)
+# ---------------------------------------------------------------------------
+
+def test_monitor_survives_zero_bandwidth_outage():
+    trace = BandwidthTrace(steps=[(0.0, 20.0), (1.0, 0.0), (2.0, 20.0)])
+    mon = NetworkMonitor(trace)
+    assert mon.poll(0.0) is None                # primes the baseline
+    ev = mon.poll(1.0)                          # link outage: flagged,
+    assert ev is not None and ev.bandwidth_mbps == 0.0   # not a crash
+    ev = mon.poll(1.5)                          # steady outage: no change
+    assert ev is None
+    ev = mon.poll(2.0)                          # recovery from 0 Mbps
+    assert ev is not None and ev.bandwidth_mbps == 20.0
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+    return cfg, params, {"tokens": toks}
+
+
+def _mgr(cfg, params, inputs, **kw):
+    runner = StageRunner(cfg, params)
+    return PipelineManager(runner, split=1, net=NetworkModel(20.0),
+                           sample_inputs=inputs, **kw)
+
+
+def test_stream_serves_all_without_switches(setup):
+    cfg, params, inputs = setup
+    mgr = _mgr(cfg, params, inputs)
+    eng = ServingEngine(mgr, clock=VirtualClock())
+    tl = eng.run(request_stream(inputs, fps=2.0, duration=2.0))
+    assert tl.arrived == 4 and tl.served_count == 4 and tl.dropped_count == 0
+    assert tl.downtime() == 0.0 and tl.windows == []
+    assert eng.edge.served == 4 and eng.cloud.served == 4
+    # stage-parallel bookkeeping: a request's latency covers edge+link+cloud
+    assert tl.p50 > 0.0
+    assert all(r.split == 1 for r in tl.records)
+    mgr.close()
+
+
+def test_pause_resume_outage_measured_and_crosschecked(setup):
+    """The satellite cross-check: measured ServiceTimeline drops vs the
+    analytic simulate_window prediction for a full-outage window."""
+    cfg, params, inputs = setup
+    mgr = _mgr(cfg, params, inputs)
+    _, timing = mgr.serve(inputs)               # steady-state service time
+    eng = ServingEngine(mgr, clock=VirtualClock())
+    fps = 5.0
+    eng.schedule_switch(1.0, "pause_resume", cfg.num_layers)
+    tl = eng.run(request_stream(inputs, fps=fps, duration=8.0))
+    (w,) = tl.windows
+    assert w.full_outage and w.t_start == pytest.approx(1.0)
+    assert w.duration > 0.05                    # a real cold rebuild
+    # the engine blocked at least as long as the strategy's own downtime
+    assert w.duration >= w.analytic_downtime * 0.999
+    # every arrival inside the window was dropped as an outage
+    in_window = tl.arrivals_in(w.t_start, w.t_end)
+    assert in_window and all(r.drop_reason == "outage" for r in in_window)
+    # the outage is derivable from the stream alone
+    lo, hi = tl.outage_bounds()
+    assert w.t_start <= lo <= hi < w.t_end
+    # measured vs analytic agree within boundary slack
+    (xc,) = crosscheck_timeline(tl, fps=fps, service_time=timing.t_edge)
+    assert xc["full_outage"]
+    assert abs(xc["measured_arrived"] - xc["predicted_arrived"]) <= 2
+    assert abs(xc["measured_dropped"] - xc["predicted_dropped"]) <= 2
+    assert xc["measured_drop_rate"] == pytest.approx(1.0)
+    mgr.close()
+
+
+def test_switch_a_drains_inflight_on_old_pipeline(setup):
+    cfg, params, inputs = setup
+    mgr = _mgr(cfg, params, inputs, standby_split=cfg.num_layers,
+               warm_standbys=True)
+    eng = ServingEngine(mgr, clock=VirtualClock())
+    # the request admitted at t=1.0 is still in flight (its measured
+    # service covers >= the 20 ms link latency) when the switch fires
+    eng.schedule_switch(1.005, "switch_a", cfg.num_layers,
+                        bandwidth_mbps=5.0)
+    tl = eng.run([(0.0, inputs), (1.0, inputs), (3.0, inputs)])
+    (w,) = tl.windows
+    assert not w.full_outage
+    assert tl.dropped_count == 0                # pointer swap drops nothing
+    assert w.duration < 0.1                     # ms-scale measured window
+    assert w.drained == 1
+    inflight = [r for r in tl.records if r.drained_in_switch]
+    assert [r.t_arrival for r in inflight] == [1.0]
+    assert inflight[0].split == 1               # served by the OLD pipeline
+    served_after = [r for r in tl.records if r.t_arrival > w.t_end]
+    assert all(r.split == cfg.num_layers for r in served_after)
+    mgr.close()
+
+
+def test_controller_switches_mid_stream_event_driven(setup):
+    """Network change arrives as a stream-clock event; the attached
+    controller repartitions while requests are in flight."""
+    cfg, params, inputs = setup
+    units = [UnitProfile("embed", 0, 0, 4_000_000)]
+    units += [UnitProfile(f"l{i}", 0.02, 0.005, b)
+              for i, b in enumerate([2_000_000, 1_000_000, 100_000])]
+    units += [UnitProfile("head", 0.02, 0.005, 0)]
+    profile = ModelProfile("toy", units)
+    trace = BandwidthTrace(steps=[(0.0, 20.0), (2.0, 0.5)])
+    mgr = _mgr(cfg, params, inputs)
+    ctl = NeukonfigController(mgr, profile, trace, strategy="switch_b2")
+    eng = ServingEngine(mgr, clock=VirtualClock(), controller=ctl)
+    # long tail: the b2 build window (measured wall, ~1 s, slower under
+    # suite-wide CPU contention) must end before the last arrivals so the
+    # post-switch assertions always have requests to look at
+    tl = eng.run(request_stream(inputs, fps=2.0, duration=15.0))
+    switched = [e for e in ctl.events if e.report is not None]
+    assert len(switched) == 1 and switched[0].t == pytest.approx(2.0)
+    (w,) = tl.windows
+    assert w.t_start == pytest.approx(2.0)
+    assert mgr.active.split == switched[0].report.new_split
+    # requests kept flowing after the switch, on the new split
+    after = [r for r in tl.records if r.t_arrival > w.t_end and r.served]
+    assert after and all(r.split == w.new_split for r in after)
+    ctl.close()
+
+
+def test_queue_depth_buffers_instead_of_dropping(setup):
+    cfg, params, inputs = setup
+    burst = [(0.0, inputs), (1e-4, inputs), (2e-4, inputs)]
+    mgr = _mgr(cfg, params, inputs)
+    tl0 = ServingEngine(mgr, clock=VirtualClock(), queue_depth=0).run(burst)
+    # camera semantics: the edge is busy with the first frame, rest drop
+    assert tl0.served_count == 1
+    assert {r.drop_reason for r in tl0.records if r.dropped} == {"busy"}
+    mgr.close()
+    mgr = _mgr(cfg, params, inputs)
+    tl2 = ServingEngine(mgr, clock=VirtualClock(), queue_depth=2).run(burst)
+    assert tl2.served_count == 3 and tl2.dropped_count == 0
+    starts = [r.t_start for r in tl2.records]
+    assert starts == sorted(starts)             # served in order, queued
+    assert tl2.records[2].t_start >= tl2.records[1].t_done - 1.0  # waited
+    mgr.close()
+
+
+def test_snapshot_active_is_atomic_and_survives_switch(setup):
+    cfg, params, inputs = setup
+    mgr = _mgr(cfg, params, inputs, standby_split=cfg.num_layers)
+    snap = mgr.pool.snapshot_active()
+    assert snap is not None and snap.key == mgr.pool.active_key
+    mgr.repartition("switch_a", cfg.num_layers)
+    # the old entry stays usable: in-flight requests drain on it
+    assert snap.pipeline.ready
+    out, _ = snap.pipeline.process(inputs)
+    assert out.shape[-1] == cfg.vocab_size
+    assert mgr.pool.snapshot_active().key != snap.key
+    mgr.pool.pause()
+    assert mgr.pool.snapshot_active() is None
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# overlapped switching (satellite: builds still in flight at switch time)
+# ---------------------------------------------------------------------------
+
+def test_repartition_drain_false_awaits_inflight_standby(setup):
+    """The controller's overlapped path: switch_a with the standby rebuild
+    from the previous switch still in flight must await it (a wait-hit on
+    the serving thread), not fail or duplicate the build."""
+    cfg, params, inputs = setup
+    mgr = _mgr(cfg, params, inputs, standby_split=cfg.num_layers)
+    gate = threading.Event()
+    real_build = EdgeCloudPipeline.build
+
+    def slow_build(self, *a, **kw):
+        gate.wait(timeout=30.0)
+        return real_build(self, *a, **kw)
+
+    try:
+        EdgeCloudPipeline.build = slow_build
+        rep1 = mgr.repartition("switch_a", cfg.num_layers)
+        assert rep1.cache_hit
+        # the standby rebuild (for the old split) is gated in flight
+        assert mgr.pool.pending(1, mgr.pool.standby_owns_weights) is not None
+        releaser = threading.Timer(0.2, gate.set)
+        releaser.start()
+        t0 = time.perf_counter()
+        rep2 = mgr.repartition("switch_a", 1, drain=False)
+        waited = time.perf_counter() - t0
+    finally:
+        EdgeCloudPipeline.build = real_build
+        gate.set()
+    assert mgr.active.split == 1                # service continued
+    assert waited >= 0.15                       # genuinely awaited the build
+    assert rep2.t_blocked >= 0.15
+    out, _ = mgr.serve(inputs)
+    assert out.shape[-1] == cfg.vocab_size
+    mgr.drain()
+    assert rep1.t_background_wall > 0.0         # filled in after drain
+    mgr.close()
+
+
+def test_engine_overlap_switch_with_build_in_flight(setup):
+    """overlap=True skips the pre-switch drain: a switch targeting a key
+    whose speculative build is still in flight rides the overlapped path
+    (wait-hit) and the service stays up."""
+    cfg, params, inputs = setup
+    mgr = _mgr(cfg, params, inputs)
+    strat = mgr.get_strategy("switch_pool(k=1)")
+    gate = threading.Event()
+    real_build = EdgeCloudPipeline.build
+
+    def slow_build(self, *a, **kw):
+        gate.wait(timeout=30.0)
+        return real_build(self, *a, **kw)
+
+    try:
+        EdgeCloudPipeline.build = slow_build
+        strat.prepare(mgr.pool, candidate_splits=(cfg.num_layers, 1))
+        assert mgr.pool.pending(cfg.num_layers, strat.owns_weights) is not None
+        eng = ServingEngine(mgr, clock=VirtualClock(), overlap=True,
+                            warmup=False)
+        eng.schedule_switch(0.5, strat, cfg.num_layers, bandwidth_mbps=5.0)
+        releaser = threading.Timer(0.2, gate.set)
+        releaser.start()
+        # long tail: the awaited build's wall time (slower under suite-wide
+        # CPU contention) must end before the last arrivals
+        tl = eng.run(request_stream(inputs, fps=1.0, duration=12.0))
+    finally:
+        EdgeCloudPipeline.build = real_build
+        gate.set()
+    assert mgr.active.split == cfg.num_layers
+    (w,) = tl.windows
+    rep = eng.reports[0]
+    assert rep.cache_hit                        # landed on the pre-built key
+    # served throughout; requests after the switch run on the new split
+    after = [r for r in tl.records if r.t_arrival > w.t_end and r.served]
+    assert after and all(r.split == cfg.num_layers for r in after)
+    mgr.close()
