@@ -1,0 +1,125 @@
+"""Perf-regression gate: a fresh ``BENCH_switch.json`` vs the committed
+``BENCH_baseline.json``.
+
+``ci.sh`` refreshes ``BENCH_switch.json`` on every tier-2 run
+(``switch_micro --smoke``), but until now nothing *compared* it to
+anything — the perf trajectory could silently regress under a green test
+suite.  This check walks every numeric leaf the two files share and
+flags:
+
+* lower-is-better metrics (``*_ms``, ``us_per_*``) that grew by more
+  than ``--tol`` x, and
+* higher-is-better metrics (``speedup_x``, ``*_reduction_x``) that
+  shrank by more than the same factor;
+
+metrics only one side has are reported as informational drift, never
+failures (the benchmark schema is allowed to grow).
+
+By default regressions WARN (exit 0) — micro timings on shared CI hosts
+are noisy, and a hard gate that cries wolf gets deleted.  Set
+``BENCH_STRICT=1`` (or pass ``--strict``) to turn regressions into a
+non-zero exit, e.g. on the scheduled tier-2 run where noise can be
+tolerated with a generous ``--tol``.
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        [--fresh BENCH_switch.json] [--baseline BENCH_baseline.json] \
+        [--tol 2.0] [--strict]
+
+The baseline is refreshed deliberately: copy a representative
+``BENCH_switch.json`` over ``BENCH_baseline.json`` and commit it with
+the change that justified the new numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+# metric-name suffixes where bigger is BETTER (everything else numeric
+# is treated as lower-is-better: _ms timings, us_per_* costs)
+_HIGHER_IS_BETTER = ("speedup_x", "reduction_x")
+# bookkeeping leaves that are not performance metrics at all
+_SKIP = ("timestamp", "smoke", "bench", "cores", "run_id")
+
+
+def _leaves(node, prefix="") -> Dict[str, float]:
+    """Flatten nested dicts to {dotted.path: numeric value}."""
+    out: Dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(_leaves(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if not prefix.endswith(_SKIP):
+            out[prefix] = float(node)
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tol: float
+            ) -> Tuple[list, list, list]:
+    """Returns (regressions, improvements, drift) as printable rows."""
+    base, new = _leaves(baseline), _leaves(fresh)
+    regressions, improvements, drift = [], [], []
+    for key in sorted(set(base) | set(new)):
+        if key not in base or key not in new:
+            drift.append(f"{key}: only in "
+                         f"{'fresh' if key in new else 'baseline'}")
+            continue
+        b, n = base[key], new[key]
+        if b <= 0.0 or n <= 0.0:        # degenerate timings: skip ratios
+            continue
+        higher_better = key.endswith(_HIGHER_IS_BETTER)
+        ratio = b / n if higher_better else n / b
+        row = f"{key}: {b:g} -> {n:g} ({ratio:.2f}x {'worse' if ratio > 1 else 'better'})"
+        if ratio > tol:
+            regressions.append(row)
+        elif ratio < 1.0 / tol:
+            improvements.append(row)
+    return regressions, improvements, drift
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_switch.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--tol", type=float, default=2.0,
+                    help="flag when worse by more than this factor "
+                         "(default 2.0: generous, shared CI hosts jitter)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regressions "
+                         "(also via BENCH_STRICT=1)")
+    args = ap.parse_args()
+    strict = args.strict or os.environ.get("BENCH_STRICT", "0") == "1"
+    for path in (args.fresh, args.baseline):
+        if not os.path.exists(path):
+            print(f"check_regression: {path} missing — nothing to compare "
+                  f"(run benchmarks/switch_micro.py first)", file=sys.stderr)
+            return 1 if strict else 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    regressions, improvements, drift = compare(baseline, fresh, args.tol)
+    for row in improvements:
+        print(f"# improved   {row}")
+    for row in drift:
+        print(f"# drift      {row}")
+    for row in regressions:
+        print(f"# REGRESSION {row}")
+    if regressions:
+        verdict = (f"{len(regressions)} perf regression(s) beyond "
+                   f"{args.tol:.1f}x vs {args.baseline}")
+        if strict:
+            print(f"check_regression: FAIL — {verdict}", file=sys.stderr)
+            return 1
+        print(f"check_regression: WARN — {verdict} "
+              f"(set BENCH_STRICT=1 to fail)", file=sys.stderr)
+        return 0
+    print(f"check_regression: OK — {len(_leaves(fresh))} metrics within "
+          f"{args.tol:.1f}x of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

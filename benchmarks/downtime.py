@@ -165,7 +165,8 @@ def run(arch="qwen2.5-3b", num_layers=None, cycles=2):
     return rows
 
 
-def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2):
+def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2, arrival=None,
+               seed=0):
     """Measured per-strategy downtime from a live request stream.
 
     A deterministic virtual-clock stream of ``fps`` requests/s crosses the
@@ -174,9 +175,15 @@ def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2):
     stream, and the reported numbers are derived from the measured
     ``ServiceTimeline`` — not from SwitchReport arithmetic.  Asserts the
     paper's ordering on the measured numbers.
+
+    ``arrival`` swaps the camera for any registered arrival-process spec
+    (``"poisson(rate=2.0)"``, ``"bursty()"``, ...), seeded by ``seed``;
+    None keeps the paper's fixed-rate stream (= ``uniform``).  For the
+    full {strategy x arrival x clients} grid see
+    ``benchmarks.scenario_matrix``.
     """
     from repro.core.network import PAPER_TRACE
-    from repro.serving import ServingEngine, VirtualClock, request_stream
+    from repro.serving import ServingEngine, VirtualClock, get_arrival
 
     cfg = get_config(arch).reduced()
     if num_layers:
@@ -184,6 +191,9 @@ def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2):
     params = T.init_model(cfg, jax.random.PRNGKey(0))
     split_fast, split_slow = 1, max(1, cfg.num_layers)
     duration = max(t for t, _ in PAPER_TRACE.steps) + 30.0
+    camera = arrival is None                # the paper's own methodology
+    proc = get_arrival(arrival or f"uniform(rate={fps})")
+    wake = 1.0 / max(proc.mean_rate(), 1e-9)
     rows, summary = [], []
     run_id = _run_id()
     downs, switch_drops = {}, {}
@@ -196,12 +206,12 @@ def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2):
         for t, bw in PAPER_TRACE.steps[1:]:
             target = split_slow if bw < 10.0 else split_fast
             eng.schedule_switch(t, spec, target, bandwidth_mbps=bw)
-        tl = eng.run(request_stream(inputs, fps=fps, duration=duration))
+        tl = eng.run((t, inputs) for t in proc.times(duration, seed=seed))
         s = tl.summary()
         downs[spec] = tl.downtime()
         # only switch-attributable drops count, not steady-state noise
-        # spikes on a loaded host (window + one arrival of wake)
-        switch_drops[spec] = tl.switch_drops(wake=1.0 / fps)
+        # spikes on a loaded host (window + one mean inter-arrival of wake)
+        switch_drops[spec] = tl.switch_drops(wake=wake)
         for i, w in enumerate(tl.windows):
             rows.append({
                 "name": f"{arch}-L{cfg.num_layers}/{spec}/stream/win{i}",
@@ -215,6 +225,7 @@ def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2):
         summary.append({
             "strategy": spec, "arch": arch, "num_layers": cfg.num_layers,
             "trace": "PAPER 20->5->20 stream", "fps": fps,
+            "arrival": proc.spec,
             "measured_downtime_ms": s["downtime_ms"],
             "analytic_downtime_ms": round(sum(
                 w.analytic_downtime for w in tl.windows) * 1e3, 3),
@@ -233,15 +244,21 @@ def run_stream(arch="qwen2.5-3b", fps=2.0, num_layers=2):
     _append_summary_jsonl(summary,
                           f"stream_downtime_{arch}-L{cfg.num_layers}_summary",
                           run_id)
-    # the paper's headline ordering, on MEASURED stream downtime
+    # the paper's headline ordering, on MEASURED stream downtime (window
+    # durations — independent of the arrival process)
     assert downs["pause_resume"] > downs["switch_b2"], \
         f"measured: pause_resume must exceed switch_b2 ({downs})"
     assert downs["switch_b2"] > 10 * downs["switch_a"], \
         f"measured: switch_b2 must dwarf switch_a ({downs})"
-    assert switch_drops["switch_a"] == 0, \
-        f"switch_a must drop nothing at its switches ({switch_drops})"
-    print("# stream ordering OK: pause_resume >> switch_b2 >> switch_a "
-          "(switch_a dropped 0 at its switches)")
+    if camera:
+        # the zero-drop claim is specific to the paper's sustainable-rate
+        # camera: an aggressive arrival process (a burst saturating the
+        # queue_depth=0 edge) legitimately drops near a switch too
+        assert switch_drops["switch_a"] == 0, \
+            f"switch_a must drop nothing at its switches ({switch_drops})"
+    print(f"# stream ordering OK: pause_resume >> switch_b2 >> switch_a "
+          f"(arrival {proc.spec}, switch_a dropped "
+          f"{switch_drops['switch_a']} at its switches)")
     return summary
 
 

@@ -1,19 +1,50 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the whole test suite (fail-fast, suite-wide
-# per-test timeout so concurrency tests fail instead of hanging), then
-# the ServingEngine measured-stream smoke (fatal: the paper's downtime
-# ordering must hold on a live request stream), then the fast
-# switch-path microbenchmark smoke (records the perf trajectory in
-# BENCH_switch.json every run; non-fatal so perf noise can't mask a
-# green test suite).  Set SKIP_BENCH=1 to run tests only.
-#   ./ci.sh [extra pytest args]
+# Tiered CI driver.
+#
+#   ./ci.sh [--tier1] [extra pytest args]   fast gate (default):
+#       the whole pytest suite, fail-fast, suite-wide per-test timeout.
+#       This is the ROADMAP's tier-1 verify and what every push runs.
+#
+#   ./ci.sh --tier2 [extra pytest args]     scheduled scenario gate:
+#       tier-1, then the measured-stream smokes — the ServingEngine
+#       single-camera smoke, the {strategy x arrival x clients} scenario
+#       matrix (fatal: the paper's downtime ordering must hold under
+#       Poisson and bursty multi-client arrivals, and the slo_aware
+#       policy must fire a p99-driven repartition), the serve_pipeline
+#       example in --smoke mode (examples stay executable, not rotting),
+#       the switch-path microbenchmark (refreshes BENCH_switch.json;
+#       non-fatal: perf noise must not mask a green suite) and the
+#       perf-regression check against the committed BENCH_baseline.json
+#       (warns by default; BENCH_STRICT=1 turns regressions fatal).
+#
+# Back-compat: SKIP_BENCH=1 forces tier-1 regardless of flags.
 set -euo pipefail
 cd "$(dirname "$0")"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
-    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python -m repro.serving --smoke
-    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python benchmarks/switch_micro.py --smoke \
+
+TIER=1
+case "${1:-}" in
+    --tier1) TIER=1; shift ;;
+    --tier2) TIER=2; shift ;;
+esac
+if [[ "${SKIP_BENCH:-0}" == "1" ]]; then
+    TIER=1
+fi
+
+run_py() { PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python "$@"; }
+
+run_py -m pytest -x -q "$@"
+
+if [[ "$TIER" == "2" ]]; then
+    run_py -m repro.serving --smoke
+    run_py -m benchmarks.scenario_matrix --smoke
+    run_py examples/serve_pipeline.py --smoke
+    # drop the committed (stale) trajectory first: if the refresh below
+    # fails, check_regression must see a MISSING fresh file (exit 1 under
+    # BENCH_STRICT), not silently compare baseline against baseline
+    rm -f BENCH_switch.json
+    run_py benchmarks/switch_micro.py --smoke \
         || echo "WARN: switch_micro smoke failed (non-fatal)" >&2
+    # warn-only by default; the scheduled workflow sets BENCH_STRICT=1
+    # (+ a cross-host BENCH_TOL) so regressions actually fail somewhere
+    run_py benchmarks/check_regression.py --tol "${BENCH_TOL:-2.0}"
 fi

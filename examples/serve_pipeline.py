@@ -23,7 +23,7 @@ from repro.core.stages import CnnStageRunner
 from repro.serving import ServingEngine, VirtualClock, request_stream
 
 
-def run_strategy(strategy, cfg, profile, fps, duration=90.0):
+def run_strategy(strategy, cfg, profile, fps, duration=90.0, trace=None):
     # every strategy gets a fresh runner (cold caches) but the SAME
     # measured profile: re-profiling per strategy (reps=1, noisy under
     # load) can collapse the split landscape and silence the controller
@@ -32,7 +32,8 @@ def run_strategy(strategy, cfg, profile, fps, duration=90.0):
     sample = {"image": jax.numpy.asarray(
         rng.standard_normal((1, cfg.input_hw, cfg.input_hw, cfg.input_ch),
                             dtype=np.float32))}
-    trace = BandwidthTrace(steps=[(0.0, 20.0), (30.0, 5.0), (60.0, 20.0)])
+    if trace is None:
+        trace = BandwidthTrace(steps=[(0.0, 20.0), (30.0, 5.0), (60.0, 20.0)])
     split0 = optimal_split(profile, trace.at(0.0)).split
     mgr = PipelineManager(runner, split=split0, net=trace.at(0.0),
                           sample_inputs=sample, warm_standbys=True)
@@ -65,14 +66,25 @@ def main():
     ap.add_argument("--arch", default="mobilenetv2")
     ap.add_argument("--hw", type=int, default=96,
                     help="input resolution (96 keeps it CPU-friendly)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: same model, compressed trace (2 live "
+                         "switches over 24 s instead of 90 s) so this "
+                         "example runs on every tier-2 pass instead of "
+                         "rotting untested")
     args = ap.parse_args()
     cfg = dataclasses.replace(get_config(args.arch), input_hw=args.hw)
     scratch = CnnStageRunner(cfg)
     profile = profile_cnn(cfg, scratch.params, scratch.units, scratch.shapes,
                           reps=1)
+    if args.smoke:
+        fps, duration = 2.0, 24.0
+        trace = BandwidthTrace(steps=[(0.0, 20.0), (8.0, 5.0), (16.0, 20.0)])
+    else:
+        fps, duration, trace = args.fps, 90.0, None
     # the live registry IS the strategy list — a new @register_strategy
     # class shows up here with no edits
-    results = {s: run_strategy(s, cfg, profile, args.fps)
+    results = {s: run_strategy(s, cfg, profile, fps, duration=duration,
+                               trace=trace)
                for s in available_strategies()}
     downs = {s: d for s, (d, n, tl) in results.items()}
     assert all(n >= 2 for _, n, _ in results.values()), "expected live switches"
@@ -81,7 +93,7 @@ def main():
     assert downs["switch_pool"] <= downs["pause_resume"]
     # and the analytic simulator agrees with the measured outage windows
     _, _, tl = results["pause_resume"]
-    for xc in crosscheck_timeline(tl, fps=args.fps, service_time=0.0):
+    for xc in crosscheck_timeline(tl, fps=fps, service_time=0.0):
         if xc["full_outage"]:
             assert abs(xc["measured_dropped"] - xc["predicted_dropped"]) <= 2
     print("paper ordering reproduced on the measured stream: "

@@ -1,9 +1,10 @@
 # The paper's primary contribution: live DNN repartitioning with minimal
 # edge service downtime (NEUKONFIG, IC2E'21).
-from repro.core.controller import (CooldownPolicy, HysteresisPolicy,
+from repro.core.controller import (POLICIES, CooldownPolicy, HysteresisPolicy,
                                    ImmediatePolicy, NeukonfigController,
                                    RepartitionEvent, RepartitionPolicy,
-                                   get_policy)
+                                   SloAwarePolicy, get_policy,
+                                   register_policy)
 from repro.core.downtime import (SimResult, crosscheck_timeline,
                                  simulate_window, sweep_fps)
 from repro.core.executor import (BackgroundBuildFailed, BuildExecutor,
@@ -20,7 +21,7 @@ from repro.core.profiler import (ModelProfile, UnitProfile, profile_cnn,
 from repro.core.stages import StageRunner
 from repro.core.state_handoff import (HandoffPlan, per_layer_state_bytes,
                                       plan_handoff)
-from repro.core.strategies import (SwitchReport, SwitchStrategy,
+from repro.core.strategies import (Registry, SwitchReport, SwitchStrategy,
                                    available_strategies, benchmark_specs,
                                    get_strategy, register_strategy,
                                    strategy_class, unregister_strategy)

@@ -25,21 +25,27 @@ pool.  (An engine owns that drain itself: ``overlap=True`` leaves builds
 in flight across switches to measure the overlapped path.)
 
 Policies (the paper repartitions on *every* change; the others are the
-repartition-frequency control its section VI leaves as future work):
+repartition-frequency control its section VI leaves as future work) are an
+open registry (``@register_policy``, same pattern as the strategies):
 
 * ``immediate``   — switch whenever the optimum moved and gains anything;
 * ``hysteresis``  — require a minimum relative latency gain;
-* ``cooldown``    — at most one switch per cooldown window.
+* ``cooldown``    — at most one switch per cooldown window;
+* ``slo_aware``   — additionally watches the live ``ServiceTimeline``'s
+  rolling p99 on observe ticks and sheds edge load when the SLO is
+  violated (repartitions triggered by the measured workload, not just by
+  bandwidth change points — ``RepartitionEvent.trigger == "slo_p99"``).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Union
+from typing import List, Optional, Sequence, Union
 
 from repro.core.network import BandwidthTrace, NetworkModel, NetworkMonitor
 from repro.core.partitioner import optimal_split, should_repartition
 from repro.core.profiler import ModelProfile
-from repro.core.strategies import SwitchStrategy, parse_spec
+from repro.core.strategies import Registry, SwitchStrategy
 from repro.core.switching import PipelineManager, SwitchReport
 
 
@@ -50,14 +56,30 @@ class RepartitionEvent:
     old_split: int
     new_split: int
     report: Optional[SwitchReport]
+    trigger: str = "network"        # "network" | "slo_p99"
 
 
 # ---------------------------------------------------------------------------
 # repartition policies
 # ---------------------------------------------------------------------------
 
+POLICIES = Registry("policy")
+
+
+def register_policy(name: str, *, override: bool = False):
+    """Class decorator adding a RepartitionPolicy to the registry."""
+    return POLICIES.register(name, override=override)
+
+
 class RepartitionPolicy:
-    """Decides whether a moved optimum is worth acting on."""
+    """Decides whether a moved optimum is worth acting on.
+
+    Policies that also want to *initiate* repartitions from the measured
+    workload (not just react to network change points) implement
+    ``slo_check``: the controller calls it on every engine observe tick
+    with the live ``ServiceTimeline`` and repartitions to the returned
+    split (``RepartitionEvent.trigger == "slo_p99"``).
+    """
 
     name = "?"
 
@@ -69,6 +91,10 @@ class RepartitionPolicy:
         """Called after a switch actually happened."""
 
 
+POLICIES.base = RepartitionPolicy
+
+
+@register_policy("hysteresis")
 class HysteresisPolicy(RepartitionPolicy):
     """Switch only when the relative latency gain clears ``min_gain``."""
 
@@ -83,15 +109,15 @@ class HysteresisPolicy(RepartitionPolicy):
         return do
 
 
+@register_policy("immediate")
 class ImmediatePolicy(HysteresisPolicy):
     """The paper's behaviour: act on every strictly-improving move."""
-
-    name = "immediate"
 
     def __init__(self):
         super().__init__(min_gain=0.0)
 
 
+@register_policy("cooldown")
 class CooldownPolicy(RepartitionPolicy):
     """Rate-limit switching: at most one repartition per window."""
 
@@ -109,24 +135,69 @@ class CooldownPolicy(RepartitionPolicy):
         self._last_switch_t = t
 
 
-POLICIES: Dict[str, type] = {"immediate": ImmediatePolicy,
-                             "hysteresis": HysteresisPolicy,
-                             "cooldown": CooldownPolicy}
+@register_policy("slo_aware")
+class SloAwarePolicy(RepartitionPolicy):
+    """Close the loop on the measured timeline: repartition when the
+    rolling p99 violates the latency SLO, not only when the network moves.
+
+    Network change points still go through the hysteresis rule.  On every
+    engine observe tick, ``slo_check`` reads the live ``ServiceTimeline``:
+    when the rolling-window p99 exceeds ``slo_p99_s``, the policy sheds
+    edge load by targeting a *smaller* split (fewer units on the edge —
+    the edge stage is the queueing bottleneck, and edge time shrinks
+    monotonically with the split).  The target is utilization-guided when
+    a profile is available — the largest split whose predicted edge
+    occupancy ``lambda * t_edge`` fits ``util_target`` at the measured
+    arrival rate — and a one-unit step-down otherwise.  ``cooldown_s``
+    paces successive sheds so one burst cannot cascade the split to 1
+    before its effect is even measurable.
+    """
+
+    def __init__(self, slo_p99_s: float = 0.5, window_s: float = 5.0,
+                 cooldown_s: float = 2.0, min_gain: float = 0.0,
+                 util_target: float = 0.8):
+        self.slo_p99_s = float(slo_p99_s)
+        self.window_s = float(window_s)
+        self.cooldown_s = float(cooldown_s)
+        self.min_gain = float(min_gain)
+        self.util_target = float(util_target)
+        self._last_switch_t = float("-inf")
+
+    # network change points: the ordinary hysteresis rule
+    def should_switch(self, t, *, current_split, best, profile, net):
+        do, _ = should_repartition(profile, current_split, net, self.min_gain,
+                                   best=best)
+        return do
+
+    def notify_switched(self, t):
+        self._last_switch_t = t
+
+    def slo_check(self, t: float, timeline, *, current_split: int,
+                  profile: Optional[ModelProfile],
+                  net: NetworkModel) -> Optional[int]:
+        """Target split if the measured rolling p99 violates the SLO."""
+        if timeline is None or current_split <= 1:
+            return None                  # nothing left to shed
+        if (t - self._last_switch_t) < self.cooldown_s:
+            return None
+        p99 = timeline.rolling_p99(t, self.window_s)
+        if math.isnan(p99) or p99 <= self.slo_p99_s:
+            return None
+        lam = timeline.rolling_arrival_rate(t, self.window_s)
+        if profile is not None and lam > 0:
+            # largest split (most edge units, least disruption) whose
+            # predicted edge occupancy fits the measured arrival rate
+            for s in range(current_split - 1, 0, -1):
+                if lam * profile.latency(s, net)[0] <= self.util_target:
+                    return s
+            return 1
+        return current_split - 1
 
 
 def get_policy(spec: Union[str, RepartitionPolicy],
                **overrides) -> RepartitionPolicy:
     """Resolve ``"cooldown(cooldown_s=5.0)"``-style specs (or pass through)."""
-    if isinstance(spec, RepartitionPolicy):
-        return spec
-    name, kwargs = parse_spec(spec)
-    kwargs.update(overrides)
-    try:
-        cls = POLICIES[name]
-    except KeyError:
-        raise KeyError(f"unknown policy {name!r}; available: "
-                       f"{sorted(POLICIES)}") from None
-    return cls(**kwargs)
+    return POLICIES.resolve(spec, **overrides)
 
 
 # ---------------------------------------------------------------------------
@@ -172,11 +243,28 @@ class NeukonfigController:
         return [0.0] + [t for t in self.monitor.trace.change_points()
                         if t <= duration]
 
-    def observe_tick(self, t: float) -> None:
+    def observe_tick(self, t: float) -> Optional[RepartitionEvent]:
         """Feed the strategy a network sample without change detection
-        (an engine's optional denser sampling between change events)."""
-        self.strategy.observe(self.mgr.pool, net=self.monitor.sample(t),
-                              profile=self.profile)
+        (an engine's optional denser sampling between change events), and
+        give SLO-aware policies their p99 look at the live timeline."""
+        net = self.monitor.sample(t)
+        self.strategy.observe(self.mgr.pool, net=net, profile=self.profile)
+        if self._engine is None or not hasattr(self.policy, "slo_check"):
+            return None
+        current = self.mgr.active.split
+        target = self.policy.slo_check(t, self._engine.timeline,
+                                       current_split=current,
+                                       profile=self.profile, net=net)
+        if target is None or target == current:
+            return None
+        # measured-workload trigger: the stream's own p99 initiated this
+        # repartition, not a bandwidth change point
+        report = self._engine.execute_switch(self.strategy, target)
+        self.policy.notify_switched(t)
+        ev = RepartitionEvent(t, net.bandwidth_mbps, current, target, report,
+                              trigger="slo_p99")
+        self.events.append(ev)
+        return ev
 
     def on_network_event(self, t: float) -> Optional[RepartitionEvent]:
         """Handle one network event at stream time ``t``: detect the

@@ -92,37 +92,87 @@ class StandbySplitMismatch(UserWarning):
 # registry
 # ---------------------------------------------------------------------------
 
-_REGISTRY: Dict[str, type] = {}
-
 _SPEC_RE = re.compile(r"^\s*([A-Za-z_]\w*)\s*(?:\((.*)\))?\s*$")
+
+
+class Registry:
+    """Name -> class registry resolved by spec string.
+
+    One implementation of the ``@register_*`` pattern, shared by the
+    switch strategies here, the repartition policies
+    (``repro.core.controller.POLICIES``) and the arrival processes
+    (``repro.serving.workload.ARRIVALS``): register classes under a name,
+    resolve instances from ``"name"`` / ``"name(k=2)"`` spec strings, and
+    pass pre-built instances through untouched.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, type] = {}
+        # expected base class for instance pass-through (assigned after
+        # the base class exists, e.g. STRATEGIES.base = SwitchStrategy):
+        # catches get_policy(some_strategy)-style mixups at resolution
+        # time instead of as an opaque AttributeError much later
+        self.base: Optional[type] = None
+
+    def register(self, name: str, *, override: bool = False):
+        """Class decorator adding ``cls`` to the registry as ``name``."""
+        def deco(cls):
+            if name in self._items and not override:
+                raise ValueError(f"{self.kind} {name!r} already registered "
+                                 f"(pass override=True to replace)")
+            cls.name = name
+            self._items[name] = cls
+            return cls
+        return deco
+
+    def unregister(self, name: str) -> None:
+        self._items.pop(name, None)
+
+    def names(self) -> List[str]:
+        return sorted(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def cls(self, name: str) -> type:
+        try:
+            return self._items[name]
+        except KeyError:
+            raise KeyError(f"unknown {self.kind} {name!r}; registered: "
+                           f"{self.names()}") from None
+
+    def resolve(self, spec, **overrides):
+        """Instantiate from a spec string, or pass an instance through."""
+        if not isinstance(spec, str):
+            if self.base is not None and not isinstance(spec, self.base):
+                raise TypeError(f"expected a {self.kind} spec string or "
+                                f"{self.base.__name__} instance, got "
+                                f"{type(spec).__name__}")
+            return spec
+        name, kwargs = parse_spec(spec)
+        kwargs.update(overrides)
+        return self.cls(name)(**kwargs)
+
+
+STRATEGIES = Registry("strategy")
 
 
 def register_strategy(name: str, *, override: bool = False):
     """Class decorator adding a SwitchStrategy to the registry."""
-    def deco(cls):
-        if name in _REGISTRY and not override:
-            raise ValueError(f"strategy {name!r} already registered "
-                             f"(pass override=True to replace)")
-        cls.name = name
-        _REGISTRY[name] = cls
-        return cls
-    return deco
+    return STRATEGIES.register(name, override=override)
 
 
 def unregister_strategy(name: str) -> None:
-    _REGISTRY.pop(name, None)
+    STRATEGIES.unregister(name)
 
 
 def available_strategies() -> List[str]:
-    return sorted(_REGISTRY)
+    return STRATEGIES.names()
 
 
 def strategy_class(name: str) -> type:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown strategy {name!r}; registered: "
-                       f"{available_strategies()}") from None
+    return STRATEGIES.cls(name)
 
 
 def parse_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
@@ -155,18 +205,14 @@ def parse_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
 def get_strategy(spec: Union[str, "SwitchStrategy"],
                  **overrides) -> "SwitchStrategy":
     """Resolve a spec string (or pass through an instance)."""
-    if isinstance(spec, SwitchStrategy):
-        return spec
-    name, kwargs = parse_spec(spec)
-    kwargs.update(overrides)
-    return strategy_class(name)(**kwargs)
+    return STRATEGIES.resolve(spec, **overrides)
 
 
 def benchmark_specs() -> List[str]:
     """Every registered strategy's benchmark variants (deduped, ordered)."""
     out: List[str] = []
     for name in available_strategies():
-        for v in _REGISTRY[name].benchmark_variants():
+        for v in STRATEGIES.cls(name).benchmark_variants():
             if v not in out:
                 out.append(v)
     return out
@@ -204,6 +250,9 @@ class SwitchStrategy:
 
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
         raise NotImplementedError
+
+
+STRATEGIES.base = SwitchStrategy
 
 
 # ---------------------------------------------------------------------------

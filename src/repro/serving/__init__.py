@@ -1,8 +1,14 @@
 """Serving layer: the request-stream ServingEngine (measured downtime on a
-live stream — see ``engine``) plus the conventional KV-cache batching
-server used by the serve example (``server``)."""
-from repro.serving.clock import Clock, VirtualClock, WallClock
+live stream — see ``engine``), the workload subsystem (seeded arrival
+processes + multi-client streams — see ``workload``) and the conventional
+KV-cache batching server used by the serve example (``server``)."""
+from repro.serving.clock import Clock, VirtualClock, WallClock, quantize
 from repro.serving.engine import ServingEngine, StageWorker, request_stream
 from repro.serving.server import BatchingServer, Request
 from repro.serving.timeline import (RequestRecord, ServiceTimeline,
                                     SwitchWindow)
+from repro.serving.workload import (ARRIVALS, ArrivalProcess, BurstyArrivals,
+                                    ClientStream, DiurnalArrivals,
+                                    PoissonArrivals, UniformArrivals,
+                                    available_arrivals, get_arrival,
+                                    make_clients, register_arrival)

@@ -17,6 +17,21 @@ from __future__ import annotations
 
 import time
 
+# one nanosecond: the grid stream timestamps are quantised to (below)
+TICK_S = 1e-9
+
+
+def quantize(t: float, tick: float = TICK_S) -> float:
+    """Snap a stream time onto the nanosecond grid.
+
+    The workload generators (``repro.serving.workload``) accumulate
+    floating-point inter-arrival gaps; quantising every emitted timestamp
+    makes seeded runs byte-identical when serialised (and keeps equality
+    checks against scheduled event times exact) without measurably moving
+    any arrival.
+    """
+    return round(t / tick) * tick
+
 
 class Clock:
     """Stream-time source the ServingEngine schedules against."""

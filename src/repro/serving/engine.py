@@ -40,6 +40,18 @@ Network changes arrive as stream-clock events: either scripted directly
 whose ``BandwidthTrace`` change points become engine events
 (``controller.network_events``).
 
+Multi-client mode (``run(clients=[ClientStream, ...], duration=...)``):
+each client generates its own seeded arrival stream
+(``repro.serving.workload``) and owns a *bounded per-client admission
+queue* (``queue_depth=0`` keeps the camera rule per client).  The edge
+stage is the shared bottleneck: when it frees, a **dispatch event** picks
+the next waiting client under the configured admission fairness —
+``round_robin`` (each non-empty queue served once per cycle, so no client
+starves while another's queue has slack) or ``weighted`` (smooth weighted
+round-robin over ``ClientStream.weight``).  Every ``RequestRecord``
+carries its client id, so the timeline derives per-client drop rates and
+latency percentiles (``ServiceTimeline.client_summary``).
+
 Which numbers are measured vs simulated: everything the engine reports is
 measured (stage walls, switch walls, per-request stream timestamps).  The
 stand-alone ``core/downtime.simulate_window`` remains as an analytic
@@ -53,16 +65,18 @@ import heapq
 import itertools
 import time
 from collections import deque
-from dataclasses import dataclass
-from typing import Iterable, List, Optional, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core.network import NetworkModel
 from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.timeline import (RequestRecord, ServiceTimeline,
                                     SwitchWindow)
+from repro.serving.workload import ClientStream
 
-# event priorities at equal timestamps: control plane before traffic
-_PRIO_NET, _PRIO_CMD, _PRIO_OBSERVE, _PRIO_REQ = 0, 1, 2, 3
+# event priorities at equal timestamps: control plane before traffic, and
+# the freed edge picks from the queues before a same-instant arrival
+_PRIO_NET, _PRIO_CMD, _PRIO_OBSERVE, _PRIO_DISPATCH, _PRIO_REQ = range(5)
 
 
 def request_stream(inputs, fps: float, duration: float, start: float = 0.0
@@ -93,6 +107,14 @@ class StageWorker:
         return end
 
 
+@dataclass
+class _ClientState:
+    """One client's live admission state inside the engine."""
+    stream: ClientStream
+    queue: deque = field(default_factory=deque)   # waiting (record, inputs)
+    credit: float = 0.0                           # smooth-WRR credit
+
+
 class ServingEngine:
     """Event loop joining an admission queue, the stage workers, the
     timeline and the repartitioning control plane."""
@@ -100,12 +122,17 @@ class ServingEngine:
     def __init__(self, mgr, *, clock: Optional[Clock] = None,
                  controller=None, timeline: Optional[ServiceTimeline] = None,
                  queue_depth: int = 0, overlap: bool = False,
-                 observe_dt: Optional[float] = None, warmup: bool = True):
+                 observe_dt: Optional[float] = None, warmup: bool = True,
+                 fairness: str = "round_robin"):
         self.mgr = mgr
         self.pool = mgr.pool
         self.clock = clock if clock is not None else VirtualClock()
         self.timeline = timeline if timeline is not None else ServiceTimeline()
         self.queue_depth = int(queue_depth)
+        if fairness not in ("round_robin", "weighted"):
+            raise ValueError(f"unknown fairness {fairness!r} "
+                             f"(round_robin | weighted)")
+        self.fairness = fairness
         # overlap=False models the inter-switch serving gap: background
         # builds settle (off-stream) before the next switch.  overlap=True
         # leaves builds in flight — switches may then wait-hit them, which
@@ -127,6 +154,13 @@ class ServingEngine:
         self._inflight: List[Tuple[float, RequestRecord]] = []
         self._pending_starts: deque = deque()
         self._rid = itertools.count()
+        # multi-client admission state (populated by run(clients=...))
+        self._clients: Dict[str, _ClientState] = {}
+        self._queued_total = 0
+        self._dispatch_armed = False
+        self._rr_idx = 0
+        self._heap: List = []
+        self._seq = itertools.count()
 
     # -- control plane ------------------------------------------------------
     def schedule_switch(self, t: float, strategy, new_split: int, *,
@@ -177,6 +211,23 @@ class ServingEngine:
     def _prune_inflight(self, t: float) -> None:
         self._inflight = [(d, r) for d, r in self._inflight if d > t]
 
+    def _execute(self, rec: RequestRecord, inputs,
+                 start: float) -> Optional[float]:
+        """Really run one request through the active pipeline from
+        ``start``; the measured timing occupies the stage workers on the
+        stream clock.  Returns the completion time (None: outage drop)."""
+        entry = self.pool.snapshot_active()
+        if entry is None:
+            self.timeline.drop(rec, "outage")
+            return None
+        _, timing = entry.pipeline.process(inputs)
+        edge_end = self.edge.occupy(start, timing.t_edge)
+        cloud_start = max(edge_end + timing.t_transfer, self.cloud.busy_until)
+        done = self.cloud.occupy(cloud_start, timing.t_cloud)
+        self.timeline.serve(rec, t_start=start, t_done=done, split=entry.split)
+        self._inflight.append((done, rec))
+        return done
+
     def _admit(self, t: float, inputs) -> None:
         rec = self.timeline.admit(next(self._rid), t)
         if t < self._outage_until:
@@ -198,40 +249,130 @@ class ServingEngine:
             self.timeline.drop(rec, "busy" if self.queue_depth == 0
                                else "queue_full")
             return
-        entry = self.pool.snapshot_active()
-        if entry is None:
+        start = max(t, self.edge.busy_until, self._blocked_until)
+        if self._execute(rec, inputs, start) is not None and start > t:
+            self._pending_starts.append(start)
+
+    # -- multi-client admission ---------------------------------------------
+    def _edge_free_at(self) -> float:
+        return max(self.edge.busy_until, self._blocked_until)
+
+    def _admit_client(self, t: float, cid: str, inputs) -> None:
+        """One client's arrival: serve immediately if the edge is idle and
+        nothing is queued, otherwise join this client's bounded queue."""
+        st = self._clients[cid]
+        rec = self.timeline.admit(next(self._rid), t, client=cid)
+        if t < self._outage_until:
             self.timeline.drop(rec, "outage")
             return
-        start = max(t, self.edge.busy_until, self._blocked_until)
-        # the request really runs through the active pipeline; the measured
-        # timing is what occupies the stage workers on the stream clock
-        _, timing = entry.pipeline.process(inputs)
-        edge_end = self.edge.occupy(start, timing.t_edge)
-        cloud_start = max(edge_end + timing.t_transfer, self.cloud.busy_until)
-        done = self.cloud.occupy(cloud_start, timing.t_cloud)
-        self.timeline.serve(rec, t_start=start, t_done=done, split=entry.split)
-        if start > t:
-            self._pending_starts.append(start)
-        self._inflight.append((done, rec))
+        if self.edge.busy_until <= t and self._queued_total == 0:
+            # only *edge occupancy* queues or drops; a dynamic switch
+            # briefly holding the serving loop merely delays the start
+            # (the waiter then occupies the edge from the block's end,
+            # exactly like the single-source path)
+            self._execute(rec, inputs, start=max(t, self._blocked_until))
+            return
+        depth = st.stream.queue_depth
+        if len(st.queue) >= depth:
+            # per-client camera rule (depth 0) / bounded queue overflow.
+            # Only this client's slack matters: another client's full
+            # queue never costs this one its slot.
+            self.timeline.drop(rec, "busy" if depth == 0 else "queue_full")
+            return
+        st.queue.append((rec, inputs))
+        self._queued_total += 1
+        self._arm_dispatch(max(self._edge_free_at(), t))
+
+    def _arm_dispatch(self, at: float) -> None:
+        """Schedule the next edge-free dispatch (at most one armed)."""
+        if not self._dispatch_armed:
+            self._dispatch_armed = True
+            heapq.heappush(self._heap, (at, _PRIO_DISPATCH, next(self._seq),
+                                        "dispatch", None))
+
+    def _dispatch(self, t: float) -> None:
+        """The edge freed: serve ONE queued request, chosen by the
+        fairness policy, then re-arm for the next completion."""
+        self._dispatch_armed = False
+        if not self._queued_total:
+            return
+        free = self._edge_free_at()
+        if free > t:                    # a switch blocked the stream since
+            self._arm_dispatch(free)    # this dispatch was armed
+            return
+        st = self._pick_client()
+        rec, inputs = st.queue.popleft()
+        self._queued_total -= 1
+        self._execute(rec, inputs, start=t)
+        if self._queued_total:
+            self._arm_dispatch(max(self._edge_free_at(), t))
+
+    def _pick_client(self) -> _ClientState:
+        """Admission fairness over the non-empty client queues."""
+        states = list(self._clients.values())
+        if self.fairness == "weighted":
+            # smooth weighted round-robin over the *backlogged* clients
+            # (work-conserving: an empty queue accrues no credit)
+            ready = [s for s in states if s.queue]
+            total = sum(s.stream.weight for s in ready)
+            for s in ready:
+                s.credit += s.stream.weight
+            best = max(ready, key=lambda s: s.credit)
+            best.credit -= total
+            return best
+        n = len(states)
+        for k in range(n):              # round-robin: next non-empty queue
+            st = states[(self._rr_idx + k) % n]
+            if st.queue:
+                self._rr_idx = (self._rr_idx + k + 1) % n
+                return st
+        raise RuntimeError("dispatch with no queued client")
 
     # -- event loop ----------------------------------------------------------
     def run(self, source: Optional[Iterable] = None,
-            duration: Optional[float] = None) -> ServiceTimeline:
+            duration: Optional[float] = None,
+            clients: Optional[Sequence[ClientStream]] = None
+            ) -> ServiceTimeline:
         """Drive the stream to completion; returns the measured timeline.
 
         ``source`` yields arrivals as ``(t, inputs)`` pairs (see
         ``request_stream``) or objects with ``.t_arrival`` and ``.data``
-        (``repro.data.FrameSource`` frames).  ``duration`` bounds the
-        control plane when there is no traffic (a control-only run).
+        (``repro.data.FrameSource`` frames).  ``clients`` instead admits
+        from N concurrent ``ClientStream``s (mutually exclusive with
+        ``source``; requires ``duration`` to bound the seeded generators).
+        ``duration`` also bounds the control plane when there is no
+        traffic (a control-only run).
         """
         if self.warmup:
             entry = self.pool.snapshot_active()
             if entry is not None:
                 entry.pipeline.warm(self.pool.sample_inputs)
-        heap: List[Tuple[float, int, int, str, object]] = []
-        seq = itertools.count()
+        heap = self._heap = []
+        seq = self._seq = itertools.count()
         t_max = 0.0
-        if source is not None:
+        if clients is not None:
+            if source is not None:
+                raise ValueError("pass source OR clients, not both")
+            if duration is None:
+                raise ValueError("clients mode needs an explicit duration "
+                                 "to bound the seeded arrival generators")
+            if self.queue_depth > 0:
+                # silently ignoring it would hand a caller porting
+                # single-source code camera-rule drop rates they never
+                # configured
+                raise ValueError(
+                    "engine queue_depth is the single-source queue; in "
+                    "clients mode set ClientStream.queue_depth per client")
+            self._clients = {}
+            for cs in clients:
+                if cs.client_id in self._clients:
+                    raise ValueError(f"duplicate client_id {cs.client_id!r}")
+                self._clients[cs.client_id] = _ClientState(cs)
+            for cs in clients:
+                for t, inputs in cs.arrivals(duration):
+                    heapq.heappush(heap, (t, _PRIO_REQ, next(seq), "creq",
+                                          (cs.client_id, inputs)))
+        elif source is not None:
             for item in source:
                 if hasattr(item, "t_arrival"):
                     t, inputs = item.t_arrival, {"tokens": item.data}
@@ -270,6 +411,10 @@ class ServingEngine:
             self._prune_inflight(t)
             if kind == "req":
                 self._admit(t, payload)
+            elif kind == "creq":
+                self._admit_client(t, *payload)
+            elif kind == "dispatch":
+                self._dispatch(t)
             elif kind == "net":
                 self.controller.on_network_event(t)
             elif kind == "observe":

@@ -11,6 +11,8 @@ a cross-check against this measured timeline (see
 """
 from __future__ import annotations
 
+import bisect
+import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -28,6 +30,8 @@ class RequestRecord:
     drop_reason: Optional[str] = None   # "outage" | "busy" | "queue_full"
     drained_in_switch: bool = False     # completed on the old pipeline while
                                         # a repartition replaced it
+    client: Optional[str] = None        # ClientStream id (None: the single
+                                        # anonymous source)
 
     @property
     def served(self) -> bool:
@@ -69,11 +73,19 @@ class ServiceTimeline:
         self.windows: List[SwitchWindow] = []
         self.t_end: Optional[float] = None      # stamped by the engine at
                                                 # end of run
+        # sorted side-indices so the rolling-window metrics the SLO policy
+        # polls every observe tick cost O(log n + window), not a full
+        # rescan of the stream (arrivals already come in stream order, so
+        # the insorts below are effectively appends)
+        self._arrival_ts: List[float] = []
+        self._completions: List[tuple] = []     # (t_done, latency), sorted
 
     # -- recording (engine-facing) ----------------------------------------
-    def admit(self, rid: int, t: float) -> RequestRecord:
-        rec = RequestRecord(rid, t)
+    def admit(self, rid: int, t: float,
+              client: Optional[str] = None) -> RequestRecord:
+        rec = RequestRecord(rid, t, client=client)
         self.records.append(rec)
+        bisect.insort(self._arrival_ts, t)
         return rec
 
     def drop(self, rec: RequestRecord, reason: str) -> None:
@@ -82,6 +94,7 @@ class ServiceTimeline:
     def serve(self, rec: RequestRecord, *, t_start: float, t_done: float,
               split: int) -> None:
         rec.t_start, rec.t_done, rec.split = t_start, t_done, split
+        bisect.insort(self._completions, (t_done, t_done - rec.t_arrival))
 
     def record_switch(self, window: SwitchWindow) -> None:
         self.windows.append(window)
@@ -106,12 +119,13 @@ class ServiceTimeline:
     def drop_rate(self) -> float:
         return self.dropped_count / self.arrived if self.arrived else 0.0
 
-    def latencies(self) -> np.ndarray:
-        return np.asarray([r.latency for r in self.records if r.served],
+    def latencies(self, client: Optional[str] = None) -> np.ndarray:
+        return np.asarray([r.latency for r in self.records if r.served
+                           and (client is None or r.client == client)],
                           dtype=np.float64)
 
-    def percentile(self, p: float) -> float:
-        lat = self.latencies()
+    def percentile(self, p: float, client: Optional[str] = None) -> float:
+        lat = self.latencies(client)
         return float(np.percentile(lat, p)) if lat.size else float("nan")
 
     @property
@@ -147,6 +161,63 @@ class ServiceTimeline:
         return sum(len(self.drops_in(w.t_start, w.t_end + wake))
                    for w in self.windows)
 
+    # -- rolling metrics (the SLO-aware policy's inputs) -------------------
+    def rolling_p99(self, t: float, window: float) -> float:
+        """p99 latency over requests *completed* in ``(t - window, t]`` —
+        the live signal an SLO-aware repartition policy watches.  NaN when
+        nothing completed in the window."""
+        lo = bisect.bisect_right(self._completions, (t - window, float("inf")))
+        hi = bisect.bisect_right(self._completions, (t, float("inf")))
+        if lo == hi:
+            return float("nan")
+        lat = np.asarray([l for _, l in self._completions[lo:hi]],
+                         dtype=np.float64)
+        return float(np.percentile(lat, 99.0))
+
+    def rolling_arrival_rate(self, t: float, window: float) -> float:
+        """Arrivals/second over ``(t - window, t]`` (served or not)."""
+        if window <= 0:
+            return 0.0
+        lo = bisect.bisect_right(self._arrival_ts, t - window)
+        hi = bisect.bisect_right(self._arrival_ts, t)
+        return (hi - lo) / window
+
+    # -- per-client attribution --------------------------------------------
+    def clients(self) -> List[str]:
+        """Client ids in first-appearance order (excludes the anonymous
+        single-source stream)."""
+        out: List[str] = []
+        for r in self.records:
+            if r.client is not None and r.client not in out:
+                out.append(r.client)
+        return out
+
+    def client_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-client admission fairness view: arrived/served/dropped,
+        drop rate and latency percentiles for every client (one pass)."""
+        groups: Dict[str, List[RequestRecord]] = {}
+        for r in self.records:
+            if r.client is not None:
+                groups.setdefault(r.client, []).append(r)
+        out: Dict[str, Dict[str, float]] = {}
+        for cid, recs in groups.items():
+            lat = np.asarray([r.latency for r in recs if r.served],
+                             dtype=np.float64)
+            dropped = sum(1 for r in recs if r.dropped)
+            out[cid] = {
+                "arrived": len(recs),
+                "served": int(lat.size),
+                "dropped": dropped,
+                "drop_rate": round(dropped / len(recs), 4),
+                # None, not NaN: these rows land in JSONL grids, and bare
+                # NaN is invalid JSON for strict parsers
+                "p50_ms": round(float(np.percentile(lat, 50.0)) * 1e3, 3)
+                if lat.size else None,
+                "p99_ms": round(float(np.percentile(lat, 99.0)) * 1e3, 3)
+                if lat.size else None,
+            }
+        return out
+
     def outage_bounds(self) -> Optional[tuple]:
         """Derive the outage interval purely from the request stream: the
         arrival span of requests dropped for "outage".  Cross-checks the
@@ -166,4 +237,22 @@ class ServiceTimeline:
             "p99_ms": round(self.p99 * 1e3, 3),
             "drained_in_switch": sum(1 for r in self.records
                                      if r.drained_in_switch),
+            "n_clients": len(self.clients()),
         }
+
+    def serialize(self) -> str:
+        """Canonical JSON of every record and switch window.
+
+        Two timelines from identically-seeded deterministic runs (virtual
+        clock, deterministic service times) compare *byte*-identical via
+        this string — the workload-determinism contract the tier-1 tests
+        enforce."""
+        return json.dumps({
+            "t_end": self.t_end,
+            "records": [[r.rid, r.client, r.t_arrival, r.t_start, r.t_done,
+                         r.split, r.drop_reason, r.drained_in_switch]
+                        for r in self.records],
+            "windows": [[w.t_start, w.t_end, w.strategy, w.full_outage,
+                         w.old_split, w.new_split, w.drained]
+                        for w in self.windows],
+        }, sort_keys=True, separators=(",", ":"))
