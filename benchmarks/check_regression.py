@@ -1,16 +1,21 @@
-"""Perf-regression gate: a fresh ``BENCH_switch.json`` vs the committed
-``BENCH_baseline.json``.
+"""Perf-regression gate: fresh benchmark trajectories vs their committed
+baselines.
 
-``ci.sh`` refreshes ``BENCH_switch.json`` on every tier-2 run
-(``switch_micro --smoke``), but until now nothing *compared* it to
-anything — the perf trajectory could silently regress under a green test
-suite.  This check walks every numeric leaf the two files share and
-flags:
+``ci.sh`` refreshes ``BENCH_switch.json`` (``switch_micro --smoke``) and
+``BENCH_handoff.json`` (``handoff.py --smoke``) on every tier-2 run, but
+until now nothing *compared* them to anything — the perf trajectory
+could silently regress under a green test suite.  By default BOTH pairs
+are checked (``BENCH_switch.json`` vs ``BENCH_baseline.json``,
+``BENCH_handoff.json`` vs ``BENCH_handoff_baseline.json``); passing
+``--fresh``/``--baseline`` explicitly narrows the run to that single
+pair.  The check walks every numeric leaf a fresh/baseline pair share
+and flags:
 
 * lower-is-better metrics (``*_ms``, ``us_per_*``) that grew by more
   than ``--tol`` x, and
-* higher-is-better metrics (``speedup_x``, ``*_reduction_x``) that
-  shrank by more than the same factor;
+* higher-is-better metrics (``speedup_x``, ``*_reduction_x``,
+  ``*_frac`` — e.g. the hand-off plan's best-arm agreement) that shrank
+  by more than the same factor;
 
 metrics only one side has are reported as informational drift, never
 failures (the benchmark schema is allowed to grow).
@@ -39,9 +44,15 @@ from typing import Dict, Tuple
 
 # metric-name suffixes where bigger is BETTER (everything else numeric
 # is treated as lower-is-better: _ms timings, us_per_* costs)
-_HIGHER_IS_BETTER = ("speedup_x", "reduction_x")
+_HIGHER_IS_BETTER = ("speedup_x", "reduction_x", "_frac")
 # bookkeeping leaves that are not performance metrics at all
 _SKIP = ("timestamp", "smoke", "bench", "cores", "run_id")
+
+# (fresh, baseline) pairs guarded when no explicit pair is given
+DEFAULT_PAIRS = (
+    ("BENCH_switch.json", "BENCH_baseline.json"),
+    ("BENCH_handoff.json", "BENCH_handoff_baseline.json"),
+)
 
 
 def _leaves(node, prefix="") -> Dict[str, float]:
@@ -79,28 +90,20 @@ def compare(baseline: dict, fresh: dict, tol: float
     return regressions, improvements, drift
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--fresh", default="BENCH_switch.json")
-    ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--tol", type=float, default=2.0,
-                    help="flag when worse by more than this factor "
-                         "(default 2.0: generous, shared CI hosts jitter)")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit non-zero on regressions "
-                         "(also via BENCH_STRICT=1)")
-    args = ap.parse_args()
-    strict = args.strict or os.environ.get("BENCH_STRICT", "0") == "1"
-    for path in (args.fresh, args.baseline):
+def check_pair(fresh_path: str, baseline_path: str, tol: float,
+               strict: bool) -> int:
+    """Compare one (fresh, baseline) pair; returns the exit code."""
+    for path in (fresh_path, baseline_path):
         if not os.path.exists(path):
             print(f"check_regression: {path} missing — nothing to compare "
-                  f"(run benchmarks/switch_micro.py first)", file=sys.stderr)
+                  f"for {fresh_path} (run the benchmark first)",
+                  file=sys.stderr)
             return 1 if strict else 0
-    with open(args.baseline) as f:
+    with open(baseline_path) as f:
         baseline = json.load(f)
-    with open(args.fresh) as f:
+    with open(fresh_path) as f:
         fresh = json.load(f)
-    regressions, improvements, drift = compare(baseline, fresh, args.tol)
+    regressions, improvements, drift = compare(baseline, fresh, tol)
     for row in improvements:
         print(f"# improved   {row}")
     for row in drift:
@@ -109,7 +112,7 @@ def main() -> int:
         print(f"# REGRESSION {row}")
     if regressions:
         verdict = (f"{len(regressions)} perf regression(s) beyond "
-                   f"{args.tol:.1f}x vs {args.baseline}")
+                   f"{tol:.1f}x vs {baseline_path}")
         if strict:
             print(f"check_regression: FAIL — {verdict}", file=sys.stderr)
             return 1
@@ -117,8 +120,33 @@ def main() -> int:
               f"(set BENCH_STRICT=1 to fail)", file=sys.stderr)
         return 0
     print(f"check_regression: OK — {len(_leaves(fresh))} metrics within "
-          f"{args.tol:.1f}x of {args.baseline}")
+          f"{tol:.1f}x of {baseline_path}")
     return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=None,
+                    help="fresh trajectory (with --baseline: check only "
+                         "this pair; default: every DEFAULT_PAIRS entry)")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--tol", type=float, default=2.0,
+                    help="flag when worse by more than this factor "
+                         "(default 2.0: generous, shared CI hosts jitter)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regressions "
+                         "(also via BENCH_STRICT=1)")
+    args = ap.parse_args()
+    strict = args.strict or os.environ.get("BENCH_STRICT", "0") == "1"
+    if args.fresh or args.baseline:
+        pairs = [(args.fresh or DEFAULT_PAIRS[0][0],
+                  args.baseline or DEFAULT_PAIRS[0][1])]
+    else:
+        pairs = list(DEFAULT_PAIRS)
+    rc = 0
+    for fresh_path, baseline_path in pairs:
+        rc = max(rc, check_pair(fresh_path, baseline_path, args.tol, strict))
+    return rc
 
 
 if __name__ == "__main__":

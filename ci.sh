@@ -10,12 +10,17 @@
 #       single-camera smoke, the {strategy x arrival x clients} scenario
 #       matrix (fatal: the paper's downtime ordering must hold under
 #       Poisson and bursty multi-client arrivals, and the slo_aware
-#       policy must fire a p99-driven repartition), the serve_pipeline
-#       example in --smoke mode (examples stay executable, not rotting),
-#       the switch-path microbenchmark (refreshes BENCH_switch.json;
+#       policy must fire a p99-driven repartition), the state-handoff
+#       benchmark (fatal: the stateful ssm downtime ordering
+#       pause_resume >> switch_b2 >> switch_a, the transfer/recompute
+#       crossover direction, and >=90% plan/measured best-arm agreement;
+#       refreshes BENCH_handoff.json), the serve_pipeline example in
+#       --smoke mode (examples stay executable, not rotting), the
+#       switch-path microbenchmark (refreshes BENCH_switch.json;
 #       non-fatal: perf noise must not mask a green suite) and the
-#       perf-regression check against the committed BENCH_baseline.json
-#       (warns by default; BENCH_STRICT=1 turns regressions fatal).
+#       perf-regression check against the committed baselines
+#       (BENCH_baseline.json + BENCH_handoff_baseline.json; warns by
+#       default, BENCH_STRICT=1 turns regressions fatal).
 #
 # Back-compat: SKIP_BENCH=1 forces tier-1 regardless of flags.
 set -euo pipefail
@@ -37,10 +42,13 @@ run_py -m pytest -x -q "$@"
 if [[ "$TIER" == "2" ]]; then
     run_py -m repro.serving --smoke
     run_py -m benchmarks.scenario_matrix --smoke
+    # drop the stale trajectory first: if the (fatal) refresh fails,
+    # check_regression must see a MISSING fresh file, not silently
+    # compare baseline against baseline
+    rm -f BENCH_handoff.json
+    run_py benchmarks/handoff.py --smoke
     run_py examples/serve_pipeline.py --smoke
-    # drop the committed (stale) trajectory first: if the refresh below
-    # fails, check_regression must see a MISSING fresh file (exit 1 under
-    # BENCH_STRICT), not silently compare baseline against baseline
+    # same staleness rule for the (non-fatal) switch microbenchmark
     rm -f BENCH_switch.json
     run_py benchmarks/switch_micro.py --smoke \
         || echo "WARN: switch_micro smoke failed (non-fatal)" >&2

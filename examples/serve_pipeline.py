@@ -57,8 +57,30 @@ def run_strategy(strategy, cfg, profile, fps, duration=90.0, trace=None):
     return total_down, n_switch, tl
 
 
+HANDOFF_HELP = """\
+state handoff (stateful pipelines):
+  This example's CNN stream is stateless per frame — the paper's regime,
+  where a repartition only moves requests.  Decode pipelines
+  (transformer KV caches, Mamba conv+SSM state) are stateful: the layers
+  that change sides must also move their per-stream state, and
+  repro.core.stateful executes that hand-off inside every switch.  Two
+  arms, chosen live from the current link by plan_handoff: 'transfer'
+  serializes the moved layers' state and charges the link time for the
+  bytes to the stream (wins on fat links), 'recompute' re-prefills the
+  moved layers on the target from boundary checkpoints and charges the
+  measured wall (wins on starved links — shipping a GB-scale KV cache
+  over 1 Mbps dwarfs re-running the prefill).  Every SwitchReport then
+  carries t_handoff (seconds the hand-off blocked the stream),
+  handoff_bytes (really-serialized payload) and handoff_mode.  See
+  benchmarks/handoff.py for the measured crossover and the
+  stateful-vs-stateless downtime per strategy.
+"""
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=HANDOFF_HELP,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--fps", type=float, default=4.0,
                     help="camera rate; keep below the edge stage's "
                          "sustainable rate or steady-state camera drops "

@@ -19,10 +19,15 @@ from repro.core.pool import PipelinePool, PoolEntry
 from repro.core.profiler import (ModelProfile, UnitProfile, profile_cnn,
                                  profile_transformer)
 from repro.core.stages import StageRunner
-from repro.core.state_handoff import (HandoffPlan, per_layer_state_bytes,
-                                      plan_handoff)
+from repro.core.state_handoff import (HandoffPlan, HandoffSplitClamped,
+                                      per_layer_state_bytes, plan_handoff)
+from repro.core.stateful import (DecodeSession, HandoffReport,
+                                 StatefulEdgeCloudPipeline,
+                                 StatefulPipelinePool, StatefulStageRunner,
+                                 make_stateful_manager)
 from repro.core.strategies import (Registry, SwitchReport, SwitchStrategy,
-                                   available_strategies, benchmark_specs,
-                                   get_strategy, register_strategy,
-                                   strategy_class, unregister_strategy)
+                                   apply_handoff, available_strategies,
+                                   benchmark_specs, get_strategy,
+                                   register_strategy, strategy_class,
+                                   unregister_strategy)
 from repro.core.switching import PipelineManager

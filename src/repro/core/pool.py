@@ -61,6 +61,10 @@ class PoolEntry:
     pipeline: EdgeCloudPipeline
     report: Optional[BuildReport]
     last_used: int = 0
+    # session-state version this entry was last synced to (stateful pools:
+    # a standby built against an older context is re-synced at swap, never
+    # trusted).  -1 = built before any state existed / stateless pool.
+    state_epoch: int = -1
 
     @property
     def split(self) -> int:
@@ -190,6 +194,13 @@ class PipelinePool:
                 e.pipeline.net = net
 
     # -- build / reuse -----------------------------------------------------
+    def _new_pipeline(self, split: int, owns_weights: bool
+                      ) -> EdgeCloudPipeline:
+        """Pipeline construction hook (stateful pools build
+        ``StatefulEdgeCloudPipeline``s against their shared session)."""
+        return EdgeCloudPipeline(self.runner, split, self.net,
+                                 owns_weights=owns_weights)
+
     def ensure(self, split: int, *, owns_weights: bool = False,
                cold: bool = False, reload_from: Optional[str] = None,
                reuse: bool = True) -> Tuple[PoolEntry, bool]:
@@ -210,8 +221,7 @@ class PipelinePool:
                 if cached is not None and cached.pipeline.ready:
                     self._touch(cached)
                     return cached, True
-        pipe = EdgeCloudPipeline(self.runner, split, self.net,
-                                 owns_weights=owns_weights)
+        pipe = self._new_pipeline(split, owns_weights)
         report = pipe.build(self.sample_inputs, cold=cold,
                             reload_from=reload_from)
         with self._lock:

@@ -11,11 +11,16 @@ decides which model families suit live repartitioning at all
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 from repro.configs.base import ArchConfig
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC
 from repro.core.network import NetworkModel
+
+
+class HandoffSplitClamped(UserWarning):
+    """``plan_handoff`` was asked about a split outside [0, num_layers]."""
 
 
 def per_layer_state_bytes(cfg: ArchConfig, *, seq_len: int, batch: int = 1,
@@ -57,20 +62,37 @@ class HandoffPlan:
 
 def plan_handoff(cfg: ArchConfig, *, old_split: int, new_split: int,
                  seq_len: int, batch: int, net: NetworkModel,
-                 target=CLOUD_SPEC) -> HandoffPlan:
-    """Price moving the decode state of layers between the splits."""
+                 target=CLOUD_SPEC, act_bytes: int = 2) -> HandoffPlan:
+    """Price moving the decode state of layers between the splits.
+
+    A split ``s`` places layers ``[0, s)`` on the edge, so the state that
+    changes sides when the split moves from ``a`` to ``b`` is that of
+    layers ``[min(a, b), max(a, b))``.  Splits are clamped into
+    ``[0, num_layers]`` once, up front (with a warning): indexing past the
+    stack used to silently reprice out-of-range layers as copies of the
+    last one, so both arms — and ``moved_bytes`` — were wrong for the
+    same inputs.
+    """
+    kinds = cfg.layer_kinds()
+    n = len(kinds)
+    clamped_old = min(max(old_split, 0), n)
+    clamped_new = min(max(new_split, 0), n)
+    if (clamped_old, clamped_new) != (old_split, new_split):
+        warnings.warn(
+            f"handoff splits ({old_split}, {new_split}) clamped to "
+            f"({clamped_old}, {clamped_new}) for a {n}-layer stack",
+            HandoffSplitClamped)
+    old_split, new_split = clamped_old, clamped_new
     moved = abs(new_split - old_split)
-    per_layer = per_layer_state_bytes(cfg, seq_len=seq_len, batch=batch)
+    per_layer = per_layer_state_bytes(cfg, seq_len=seq_len, batch=batch,
+                                      act_bytes=act_bytes)
     moved_bytes = int(moved * per_layer)
     t_transfer = net.transfer_time(moved_bytes) if moved else 0.0
     # recompute: re-run the moved layers over the full context on the target
     from repro.core.profiler import _layer_flops
-    kinds = cfg.layer_kinds()
     flops = sum(
-        _layer_flops(cfg, kinds[min(i, len(kinds) - 1)],
-                     tokens=batch * seq_len, seq=seq_len)
-        for i in range(min(old_split, new_split),
-                       min(max(old_split, new_split), len(kinds))))
+        _layer_flops(cfg, kinds[i], tokens=batch * seq_len, seq=seq_len)
+        for i in range(min(old_split, new_split), max(old_split, new_split)))
     t_recompute = flops / (target.flops * target.mfu) if moved else 0.0
     best = "transfer" if t_transfer <= t_recompute else "recompute"
     return HandoffPlan(moved, moved_bytes, t_transfer, t_recompute, best)

@@ -1,0 +1,920 @@
+"""Stateful dynamic switching: live KV/SSM state hand-off at repartition.
+
+The paper's video pipeline is stateless per frame, so Dynamic Switching
+only has to move *requests* to the new pipeline.  A decode pipeline is
+stateful: every layer carries per-stream decode state (a KV cache for
+attention layers, conv+SSM state for Mamba layers), and when the split
+moves from ``a`` to ``b`` the state of layers ``[min(a,b), max(a,b))``
+changes sides.  ``core/state_handoff.plan_handoff`` prices the two ways
+of moving it; this module *executes* the plan:
+
+* ``transfer``  — the moved layers' state is really serialized
+  (``bytes``), the link time for those bytes is priced with the current
+  ``NetworkModel`` and charged to the request stream, and the payload is
+  deserialized back on the target;
+* ``recompute`` — the moved layers are re-prefilled on the target from
+  the per-layer boundary activations the session checkpoints as it
+  decodes, and the *measured* wall of that re-prefill blocks the stream.
+
+Pieces (all operating on the same split convention: split ``s`` = layers
+``[0, s)`` on the edge; the embedding rides with the edge stage, the LM
+head with the cloud stage):
+
+``StatefulStageRunner``
+    Compiles decode-step and full-sequence executables for contiguous
+    *unit* ranges (a unit is a decoder layer, or — for the hybrid
+    family — one application of the shared attention block).  AOT
+    executables are cached per ``(range, avals)`` exactly like
+    ``StageRunner``'s, with ``fresh=True`` keeping "new container"
+    retrace semantics.
+
+``DecodeSession``
+    The per-stream decode state: token history, one state entry per
+    unit (``k{i}``/``v{i}`` heads-major KV, ``conv{i}``/``ssm{i}``
+    recurrent state, ``ak{g}``/``av{g}`` shared-attn KV), the per-unit
+    boundary activations that make targeted recompute possible, and a
+    monotonically increasing **state epoch** — the version number the
+    pool uses to decide whether a standby's view of the context can be
+    trusted.  ``export_layers``/``import_layers``/``recompute_layers``
+    are the hand-off primitives.
+
+``StatefulEdgeCloudPipeline``
+    ``EdgeCloudPipeline``-compatible: ``process`` runs ONE decode step
+    through the compiled edge/cloud stages (measured walls, priced
+    one-token boundary transfer) and advances the shared session.
+
+``StatefulPipelinePool``
+    ``PipelinePool`` whose ``activate`` executes the hand-off between
+    the old and new split *before* the pointer swap: the plan's best arm
+    is chosen live from the pool's current ``NetworkModel`` (predicted
+    ``t_recompute`` uses a throughput spec calibrated from the session's
+    own measured prefill), and the resulting ``HandoffReport`` is left
+    for the caller (``PipelineManager.repartition`` /
+    ``ServingEngine.execute_switch``) to stamp onto the ``SwitchReport``
+    via ``strategies.apply_handoff``.  Every entry is epoch-stamped at
+    build and re-synced — never trusted — when its epoch is stale at
+    swap.  All four registered strategies work unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC
+from repro.core.network import NetworkModel
+from repro.core.pipeline import BuildReport, RequestTiming
+from repro.core.pool import PipelinePool
+from repro.core.stages import abstractify, aval_fingerprint
+from repro.core.state_handoff import HandoffPlan, plan_handoff
+from repro.models import layers as Lyr
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+
+_ATTN_FAMILIES = ("dense", "moe", "vlm")
+_SUPPORTED = _ATTN_FAMILIES + ("ssm", "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# unit layout
+# ---------------------------------------------------------------------------
+
+def unit_list(cfg: ArchConfig) -> List[Tuple[str, int]]:
+    """Execution-ordered state units: ``("layer", i)`` per decoder layer,
+    plus ``("app", g)`` after every ``hybrid_period``-th hybrid layer."""
+    if cfg.family not in _SUPPORTED:
+        raise ValueError(f"stateful serving unsupported for {cfg.family!r}")
+    units: List[Tuple[str, int]] = []
+    for i in range(cfg.num_layers):
+        units.append(("layer", i))
+        if cfg.family == "hybrid" and cfg.hybrid_period \
+                and (i + 1) % cfg.hybrid_period == 0:
+            units.append(("app", (i + 1) // cfg.hybrid_period - 1))
+    return units
+
+
+def unit_index_of_split(cfg: ArchConfig, split: int) -> int:
+    """Units on the edge for a split of ``split`` LAYERS: layers
+    ``[0, split)`` plus any shared-attn application firing inside them."""
+    split = min(max(split, 0), cfg.num_layers)
+    idx = split
+    if cfg.family == "hybrid" and cfg.hybrid_period:
+        idx += split // cfg.hybrid_period
+    return idx
+
+
+def _unit_state_keys(cfg: ArchConfig, unit: Tuple[str, int]) -> Tuple[str, ...]:
+    kind, idx = unit
+    if kind == "app":
+        return (f"ak{idx}", f"av{idx}")
+    if cfg.family in _ATTN_FAMILIES:
+        return (f"k{idx}", f"v{idx}")
+    return (f"conv{idx}", f"ssm{idx}")
+
+
+def _fit_kv(a, cap: int):
+    """(B, S, KH, hd) seq-major prefill K/V -> heads-major (B, KH, cap, hd)."""
+    S = a.shape[1]
+    if S > cap:
+        a = a[:, S - cap:]
+    elif S < cap:
+        a = jnp.pad(a, ((0, 0), (0, cap - S), (0, 0), (0, 0)))
+    return a.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# stage runner: compiled unit-range executables
+# ---------------------------------------------------------------------------
+
+class StatefulStageRunner:
+    """Compiles decode/full-sequence functions over contiguous unit ranges.
+
+    Mirrors ``StageRunner``'s caching contract: warm builds share one
+    AOT-executable cache per ``(mode, range, avals)``; ``fresh=True``
+    retraces+recompiles and leaves no trace ("new container")."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_seq: int = 128,
+                 attn_impl: str = "chunked"):
+        if cfg.family not in _SUPPORTED:
+            raise ValueError(f"stateful serving unsupported for {cfg.family!r}")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = int(max_seq)
+        self.attn_impl = attn_impl
+        self.units = unit_list(cfg)
+        self._aot_cache: Dict[Tuple, Any] = {}
+        self._full_cache: Dict[Tuple[int, int], Any] = {}
+        self._lock = threading.RLock()
+
+    @property
+    def num_units(self) -> int:
+        """Split domain for the pool/partitioner: one unit per LAYER."""
+        return self.cfg.num_layers
+
+    # -- one decoder unit, one token ------------------------------------
+    def _decode_unit(self, params, unit, x, cache, new, pos):
+        cfg = self.cfg
+        kind, idx = unit
+        if kind == "app" or cfg.family in _ATTN_FAMILIES:
+            kk, vk = _unit_state_keys(cfg, unit)
+            p = params["shared"] if kind == "app" \
+                else jax.tree.map(lambda a: a[idx], params["layers"])
+            B = x.shape[0]
+            h = T._apply_norm(cfg, p["ln1"], x)
+            q, k, v = T._project_qkv(cfg, p["attn"], h)
+            cos, sin = Lyr.rope_cos_sin(pos[None], cfg.head_dim,
+                                        cfg.rope_theta)
+            q = Lyr.apply_rope(q, cos[None], sin[None])
+            k = Lyr.apply_rope(k, cos[None], sin[None])
+            kc = jax.lax.dynamic_update_slice(
+                cache[kk], k.transpose(0, 2, 1, 3).astype(cache[kk].dtype),
+                (0, 0, pos, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache[vk], v.transpose(0, 2, 1, 3).astype(cache[vk].dtype),
+                (0, 0, pos, 0))
+            new[kk], new[vk] = kc, vc
+            att = Lyr.decode_attention(q, kc, vc, pos=pos + 1)
+            x = x + att.reshape(B, 1, -1) @ p["attn"]["wo"]
+            h2 = T._apply_norm(cfg, p["ln2"], x)
+            if "moe" in p:
+                ff, _ = Lyr.moe_layer(p["moe"], h2, top_k=cfg.moe.top_k,
+                                      capacity_factor=cfg.moe.capacity_factor)
+            else:
+                ff = Lyr.mlp(p["mlp"], h2, gated=cfg.gated_mlp)
+            return x + ff
+        ck, sk = _unit_state_keys(cfg, unit)
+        lp = jax.tree.map(lambda a: a[idx], params["layers"])
+        h = T._apply_norm(cfg, lp["ln"], x)
+        block = SSM.mamba1_block if cfg.family == "ssm" else SSM.mamba2_block
+        y, nc = block(lp["mamba"], h,
+                      cache={"conv": cache[ck], "ssm": cache[sk]}, cfg=cfg)
+        new[ck], new[sk] = nc["conv"], nc["ssm"]
+        return x + y
+
+    # -- one decoder unit, full sequence --------------------------------
+    def _full_unit(self, params, unit, x, caches, rope_cs):
+        cfg = self.cfg
+        kind, idx = unit
+        if kind == "app" or cfg.family in _ATTN_FAMILIES:
+            kk, vk = _unit_state_keys(cfg, unit)
+            p = params["shared"] if kind == "app" \
+                else jax.tree.map(lambda a: a[idx], params["layers"])
+            x, (k, v), _ = T.attn_block_full(cfg, p, x, rope_cs,
+                                             impl=self.attn_impl,
+                                             window=cfg.sliding_window)
+            caches[kk] = _fit_kv(k, self.max_seq)
+            caches[vk] = _fit_kv(v, self.max_seq)
+            return x
+        ck, sk = _unit_state_keys(cfg, unit)
+        lp = jax.tree.map(lambda a: a[idx], params["layers"])
+        h = T._apply_norm(cfg, lp["ln"], x)
+        block = SSM.mamba1_block if cfg.family == "ssm" else SSM.mamba2_block
+        y, nc = block(lp["mamba"], h, cfg=cfg)
+        caches[ck], caches[sk] = nc["conv"], nc["ssm"]
+        return x + y
+
+    # -- range functions -------------------------------------------------
+    def _make_decode_fn(self, u0: int, u1: int):
+        units = self.units[u0:u1]
+
+        def fn(params, x, cache, pos):
+            new: Dict[str, Any] = {}
+            bounds = []
+            for unit in units:
+                bounds.append(x)
+                x = self._decode_unit(params, unit, x, cache, new, pos)
+            b = jnp.stack(bounds) if bounds \
+                else jnp.zeros((0,) + x.shape, x.dtype)
+            return x, new, b
+        return fn
+
+    def _make_full_fn(self, u0: int, u1: int):
+        units = self.units[u0:u1]
+
+        def fn(params, x):
+            S = x.shape[1]
+            rope_cs = Lyr.rope_cos_sin(jnp.arange(S), self.cfg.head_dim,
+                                       self.cfg.rope_theta)
+            caches: Dict[str, Any] = {}
+            bounds = []
+            for unit in units:
+                bounds.append(x)
+                x = self._full_unit(params, unit, x, caches, rope_cs)
+            b = jnp.stack(bounds) if bounds \
+                else jnp.zeros((0,) + x.shape, x.dtype)
+            return x, caches, b
+        return fn
+
+    # -- masked re-prefill (the recompute hand-off arm) ------------------
+    # The recompute arm runs at whatever context length the stream has
+    # reached, so an exact-shape jit would recompile on every hand-off.
+    # Instead the context is zero-padded to ``max_seq`` (ONE compile per
+    # unit range, ever) and correctness beyond the live length is
+    # enforced the way bucketed prefills do it: causal attention already
+    # ignores the pad for valid rows (pad rows are masked out of the
+    # cache), and the recurrent state freezes at the live length because
+    # a masked dt makes every padded step an identity update
+    # (decay = exp(0 * A) = 1, update = 0).
+
+    def _masked_mamba(self, lp, x, mask, length):
+        cfg = self.cfg
+        s = cfg.ssm
+        di = cfg.d_inner
+        B = x.shape[0]
+        h = T._apply_norm(cfg, lp["ln"], x)
+        p = lp["mamba"]
+        if cfg.family == "ssm":            # mamba1
+            xz = h @ p["in_proj"]
+            xin, z = jnp.split(xz, 2, axis=-1)
+            xc, _ = SSM.causal_conv1d(xin, p["conv_w"], p["conv_b"])
+            xc = jax.nn.silu(xc)
+            dbc = xc @ p["x_proj"]
+            dt, Bc, Cc = jnp.split(dbc, [s.dt_rank, s.dt_rank + s.d_state],
+                                   axis=-1)
+            dt = jax.nn.softplus(
+                dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                + p["dt_bias"]) * mask[None, :, None]
+            A = -jnp.exp(p["A_log"])
+            y, hs = SSM.mamba1_scan(dt.astype(xc.dtype), Bc, Cc, xc, A)
+            y = y.astype(jnp.float32) + xc.astype(jnp.float32) * p["D"]
+            y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+            out = y @ p["out_proj"]
+            conv_src = xin
+        else:                              # mamba2 (hybrid backbone)
+            H = di // s.head_dim
+            N = s.d_state
+            zxbcdt = h @ p["in_proj"]
+            z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+            xbc_c, _ = SSM.causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+            xbc_c = jax.nn.silu(xbc_c)
+            xin, Bc, Cc = jnp.split(xbc_c, [di, di + N], axis=-1)
+            S_len = x.shape[1]
+            xh = xin.reshape(B, S_len, H, s.head_dim)
+            dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]) \
+                * mask[None, :, None]
+            A = -jnp.exp(p["A_log"])
+            y, hs = SSM.mamba2_scan(dt, Bc, Cc, xh, A)
+            y = y + xh.astype(jnp.float32) * p["D"][:, None]
+            y = y.reshape(B, S_len, di).astype(x.dtype)
+            y = y * jax.nn.silu(z)
+            var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1,
+                           keepdims=True)
+            y = (y * jax.lax.rsqrt(var + 1e-5).astype(y.dtype)) * p["norm"]
+            out = y @ p["out_proj"]
+            conv_src = xbc
+        # conv state = the K-1 raw inputs trailing the LIVE length, not
+        # the pad (dynamic_slice at the traced length)
+        K = p["conv_w"].shape[0]
+        C = conv_src.shape[-1]
+        cat = jnp.concatenate(
+            [jnp.zeros((B, K - 1, C), conv_src.dtype), conv_src], axis=1)
+        conv_state = jax.lax.dynamic_slice(
+            cat, (0, length, 0), (B, K - 1, C))
+        return x + out, {"conv": conv_state, "ssm": hs}
+
+    def _make_recompute_fn(self, u0: int, u1: int):
+        units = self.units[u0:u1]
+        cfg = self.cfg
+        CL = self.max_seq
+
+        def fn(params, x, length):
+            # x: (B, CL, D) zero-padded context; length: live prefix
+            mask = (jnp.arange(CL) < length)
+            rope_cs = Lyr.rope_cos_sin(jnp.arange(CL), cfg.head_dim,
+                                       cfg.rope_theta)
+            caches: Dict[str, Any] = {}
+            for unit in units:
+                kind, idx = unit
+                if kind == "app" or cfg.family in _ATTN_FAMILIES:
+                    kk, vk = _unit_state_keys(cfg, unit)
+                    p = params["shared"] if kind == "app" \
+                        else jax.tree.map(lambda a: a[idx], params["layers"])
+                    x, (k, v), _ = T.attn_block_full(
+                        cfg, p, x, rope_cs, impl=self.attn_impl,
+                        window=cfg.sliding_window)
+                    m = mask[None, :, None, None]
+                    caches[kk] = (k * m).transpose(0, 2, 1, 3)
+                    caches[vk] = (v * m).transpose(0, 2, 1, 3)
+                else:
+                    ck, sk = _unit_state_keys(cfg, unit)
+                    lp = jax.tree.map(lambda a: a[idx], params["layers"])
+                    x, st = self._masked_mamba(lp, x, mask, length)
+                    caches[ck], caches[sk] = st["conv"], st["ssm"]
+            return caches
+        return fn
+
+    def recompute_fn(self, u0: int, u1: int):
+        """Cached masked re-prefill fn for units [u0, u1) — compiled once
+        per range, reused at every context length."""
+        with self._lock:
+            key = ("recompute", u0, u1)
+            if key not in self._full_cache:
+                self._full_cache[key] = jax.jit(
+                    self._make_recompute_fn(u0, u1))
+            return self._full_cache[key]
+
+    def _make_embed_fn(self):
+        def fn(params, tokens):
+            return params["embed"][tokens]
+        return fn
+
+    def _make_head_fn(self):
+        cfg = self.cfg
+
+        def fn(params, x):
+            x = T._apply_norm(cfg, params["final_norm"], x)
+            return (x[:, -1] @ T.lm_head_weights(cfg, params)).astype(
+                jnp.float32)
+        return fn
+
+    # -- compiled executables -------------------------------------------
+    def executable(self, mode: str, u0: int, u1: int, params, *args,
+                   fresh: bool = False):
+        """AOT executable for a unit range, specialized to the arg avals.
+
+        ``mode``: ``decode`` (params, x, cache, pos), ``full`` (params, x),
+        ``embed`` (params, tokens), ``head`` (params, x)."""
+        makers = {"decode": lambda: self._make_decode_fn(u0, u1),
+                  "full": lambda: self._make_full_fn(u0, u1),
+                  "embed": self._make_embed_fn,
+                  "head": self._make_head_fn}
+        avals = abstractify(args)
+        key = (mode, u0, u1) + aval_fingerprint(avals)
+        if not fresh:
+            with self._lock:
+                hit = self._aot_cache.get(key)
+            if hit is not None:
+                return hit
+        compiled = jax.jit(makers[mode]()).lower(
+            abstractify(params), *avals).compile()
+        if not fresh:
+            with self._lock:
+                self._aot_cache[key] = compiled
+        return compiled
+
+    def full_fn(self, u0: int, u1: int):
+        """Warm (retracing-jit) full-sequence fn — the prefill/recompute
+        path, shape-polymorphic over the growing context."""
+        with self._lock:
+            if (u0, u1) not in self._full_cache:
+                self._full_cache[(u0, u1)] = jax.jit(
+                    self._make_full_fn(u0, u1))
+            return self._full_cache[(u0, u1)]
+
+
+# ---------------------------------------------------------------------------
+# decode session: the stream's state
+# ---------------------------------------------------------------------------
+
+class DecodeSession:
+    """Per-stream decode state shared by every pipeline in the pool.
+
+    ``epoch`` is the state version: bumped on prefill and on every
+    committed decode step.  A pool entry stamped with an older epoch was
+    built against a stale view of the context and must be re-synced at
+    activation, never trusted."""
+
+    def __init__(self, runner: StatefulStageRunner):
+        self.runner = runner
+        self.cfg = runner.cfg
+        self.cache: Dict[str, Any] = {}
+        self.tokens: Optional[np.ndarray] = None   # (B, T) context so far
+        self.bounds: Optional[np.ndarray] = None   # (U, B, T, D) per-unit in
+        self.last_logits = None
+        self.pos = 0
+        self.epoch = 0
+        self.calib_spec = CLOUD_SPEC       # refined by prefill()
+        # serialization-path calibration (refined by prefill()): fixed
+        # per-payload overhead and sustained throughput of the
+        # export->import round trip, folded into hand-off pricing
+        self._ser_overhead_s: Optional[float] = None
+        self._ser_bps: Optional[float] = None
+        self._lock = threading.RLock()
+
+    @property
+    def batch(self) -> int:
+        return 1 if self.tokens is None else self.tokens.shape[0]
+
+    # -- lifecycle -------------------------------------------------------
+    def prefill(self, tokens) -> None:
+        """Run the whole stack over the prompt, building every unit's
+        state + boundary checkpoints, and calibrate the recompute-arm
+        throughput from the measured wall."""
+        tokens = jnp.asarray(tokens)
+        r = self.runner
+        U = len(r.units)
+        if tokens.shape[1] > r.max_seq:
+            raise ValueError(f"prompt {tokens.shape[1]} > max_seq {r.max_seq}")
+        x = r.params["embed"][tokens]
+        x, caches, bounds = r.full_fn(0, U)(r.params, x)
+        logits = (T._apply_norm(self.cfg, r.params["final_norm"], x)[:, -1]
+                  @ T.lm_head_weights(self.cfg, r.params)).astype(jnp.float32)
+        jax.block_until_ready(logits)
+        # calibration wall from a second, warm run: the first call paid
+        # jit compilation, which would make the recompute arm look orders
+        # of magnitude slower than it is
+        t0 = time.perf_counter()
+        jax.block_until_ready(r.full_fn(0, U)(r.params, x)[0])
+        wall = time.perf_counter() - t0
+        with self._lock:
+            self.cache = dict(caches)
+            self.tokens = np.asarray(tokens)
+            self.bounds = np.asarray(bounds)
+            self.last_logits = logits
+            self.pos = int(tokens.shape[1])
+            self.epoch += 1
+        self._calibrate(wall)
+        self._calibrate_serialization()
+
+    def _calibrate(self, wall: float) -> None:
+        """Recompute-arm pricing spec from this host's measured prefill
+        throughput (flops actually achieved, mfu folded in)."""
+        from repro.core.profiler import _layer_flops
+        toks = self.batch * self.pos
+        flops = sum(_layer_flops(self.cfg, k, tokens=toks, seq=self.pos)
+                    for k in self.cfg.layer_kinds())
+        if wall > 0 and flops > 0:
+            self.calib_spec = dataclasses.replace(
+                CLOUD_SPEC, name="host-calibrated", flops=flops / wall,
+                mfu=1.0)
+
+    def _calibrate_serialization(self) -> None:
+        """Measure the export->import round trip at two payload sizes and
+        split it into fixed overhead + throughput.  The hand-off's
+        serialization shares the transfer path with the wire, so pricing
+        that ignores it would call ``transfer`` on fat links where the
+        copy itself is the bottleneck."""
+        L = self.cfg.num_layers
+        half = max(1, L // 2)
+
+        def round_trip(hi):
+            payload, n = self.export_layers(0, hi)
+            self.import_layers(payload)
+            return n
+        round_trip(L)                       # warm dispatch paths
+
+        def timed(hi):
+            best, n = float("inf"), 0
+            for _ in range(3):              # min-of-3: robust to GC spikes
+                t0 = time.perf_counter()
+                n = round_trip(hi)
+                best = min(best, time.perf_counter() - t0)
+            return best, n
+        t_full, n_full = timed(L)
+        t_half, n_half = timed(half)
+        if n_full > n_half and t_full > t_half:
+            bps = (n_full - n_half) / (t_full - t_half)
+            self._ser_bps = bps
+            self._ser_overhead_s = max(0.0, t_full - n_full / bps)
+        else:                               # degenerate (1-layer stacks)
+            self._ser_bps = None
+            self._ser_overhead_s = t_full
+
+    def handoff_net(self, net: NetworkModel) -> NetworkModel:
+        """Effective link model for hand-off pricing: the measured
+        serialization overhead adds to the latency and its throughput
+        composes harmonically with the wire bandwidth."""
+        if self._ser_overhead_s is None:
+            return net
+        lat = net.latency_ms + self._ser_overhead_s * 1e3
+        bw = net.bandwidth_mbps
+        if self._ser_bps:
+            ser_mbps = self._ser_bps * 8 / 1e6
+            bw = 1.0 / (1.0 / bw + 1.0 / ser_mbps)
+        return NetworkModel(bw, latency_ms=lat)
+
+    def next_token(self):
+        """Greedy next token from the last logits (the decode stream)."""
+        assert self.last_logits is not None, "session not prefilled"
+        return jnp.argmax(self.last_logits, -1)[:, None].astype(jnp.int32)
+
+    def commit_step(self, token, new_state: Dict[str, Any], bounds,
+                    logits) -> None:
+        """Land one decode step: state updates, boundary checkpoints,
+        context growth, epoch bump."""
+        with self._lock:
+            self.cache.update(new_state)
+            self.tokens = np.concatenate(
+                [self.tokens, np.asarray(token)], axis=1)
+            self.bounds = np.concatenate(
+                [self.bounds, np.asarray(bounds)], axis=2)
+            self.last_logits = logits
+            self.pos += 1
+            self.epoch += 1
+
+    def subset(self, u0: int, u1: int) -> Dict[str, Any]:
+        """The state entries a stage over units [u0, u1) reads/writes."""
+        with self._lock:
+            out = {}
+            for unit in self.runner.units[u0:u1]:
+                for k in _unit_state_keys(self.cfg, unit):
+                    out[k] = self.cache[k]
+            return out
+
+    # -- hand-off primitives ---------------------------------------------
+    def export_layers(self, lo: int, hi: int
+                      ) -> Tuple[Dict[str, tuple], int]:
+        """Really serialize the state of layers [lo, hi): KV sliced to the
+        live context, recurrent state whole.  Returns (payload, nbytes)."""
+        u0 = unit_index_of_split(self.cfg, lo)
+        u1 = unit_index_of_split(self.cfg, hi)
+        payload: Dict[str, tuple] = {}
+        nbytes = 0
+        with self._lock:
+            for unit in self.runner.units[u0:u1]:
+                for k in _unit_state_keys(self.cfg, unit):
+                    arr = np.asarray(self.cache[k])
+                    if k[0] in ("k", "v", "a"):      # KV: valid region only
+                        arr = arr[:, :, :self.pos]
+                    buf = arr.tobytes()
+                    payload[k] = (str(arr.dtype), arr.shape, buf)
+                    nbytes += len(buf)
+        return payload, nbytes
+
+    def import_layers(self, payload: Dict[str, tuple]) -> None:
+        """Deserialize an ``export_layers`` payload back into the state.
+
+        KV rows at positions >= ``pos`` are zero by invariant (zero-init
+        caches, masked recompute), so a sliced KV payload reassembles
+        into a fresh zero buffer with ONE host->device transfer instead
+        of an in-place scatter against the old cache."""
+        with self._lock:
+            for k, (dtype, shape, buf) in payload.items():
+                arr = np.frombuffer(buf, dtype=dtype).reshape(shape)
+                if k[0] in ("k", "v", "a"):
+                    full = np.zeros(self.cache[k].shape, dtype)
+                    full[:, :, :arr.shape[2]] = arr
+                    self.cache[k] = jnp.asarray(full)
+                else:
+                    self.cache[k] = jnp.asarray(arr)
+
+    def recompute_layers(self, lo: int, hi: int) -> None:
+        """Re-prefill layers [lo, hi) over the full live context from the
+        boundary checkpoint entering layer ``lo`` (measured by the caller).
+
+        Runs the masked fixed-shape path: padded to ``max_seq`` so the
+        compiled executable is reused at every context length."""
+        u0 = unit_index_of_split(self.cfg, lo)
+        u1 = unit_index_of_split(self.cfg, hi)
+        if u0 >= u1:
+            return
+        r = self.runner
+        with self._lock:
+            x0 = self.bounds[u0]                       # (B, T, D)
+        B, T_len, D = x0.shape
+        x_pad = np.zeros((B, r.max_seq, D), x0.dtype)
+        x_pad[:, :T_len] = x0
+        caches = r.recompute_fn(u0, u1)(r.params, jnp.asarray(x_pad),
+                                        jnp.int32(T_len))
+        jax.block_until_ready(caches)
+        with self._lock:
+            self.cache.update(caches)
+
+    # -- test/benchmark support ------------------------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"cache": dict(self.cache), "tokens": self.tokens,
+                    "bounds": self.bounds, "logits": self.last_logits,
+                    "pos": self.pos, "epoch": self.epoch}
+
+    def restore(self, snap: dict) -> None:
+        with self._lock:
+            self.cache = dict(snap["cache"])
+            self.tokens, self.bounds = snap["tokens"], snap["bounds"]
+            self.last_logits = snap["logits"]
+            self.pos, self.epoch = snap["pos"], snap["epoch"]
+
+
+# ---------------------------------------------------------------------------
+# pipeline: one split, EdgeCloudPipeline-compatible
+# ---------------------------------------------------------------------------
+
+class StatefulEdgeCloudPipeline:
+    """Two compiled decode stages over a shared ``DecodeSession``.
+
+    ``process`` runs ONE decode step: the edge stage covers the embedding
+    plus layers [0, split) (measured wall, scaled by ``edge_scale``), the
+    one-token hidden state crossing the link is priced with the current
+    ``NetworkModel``, and the cloud stage covers layers [split, L) plus
+    the LM head (measured wall).  The session — state, boundaries, token
+    history — advances once per served request."""
+
+    def __init__(self, runner: StatefulStageRunner, split: int,
+                 net: NetworkModel, *, session: DecodeSession,
+                 edge_scale: float = CLOUD_SPEC.flops / EDGE_SPEC.flops,
+                 owns_weights: bool = False):
+        self.runner = runner
+        self.session = session
+        self.split = min(max(int(split), 0), runner.num_units)
+        self.net = net
+        self.edge_scale = edge_scale
+        self.owns_weights = owns_weights
+        self.params = runner.params
+        self._u_edge = unit_index_of_split(runner.cfg, self.split)
+        self._u_all = len(runner.units)
+        self.embed_fn = None
+        self.edge_fn = None
+        self.cloud_fn = None
+        self.head_fn = None
+
+    # -- build -----------------------------------------------------------
+    def build(self, sample_inputs=None, *, cold: bool,
+              reload_from: Optional[str] = None) -> BuildReport:
+        rep = BuildReport()
+        r = self.runner
+        if reload_from is not None:
+            from repro.checkpoint import load_pytree
+            t0 = time.perf_counter()
+            self.params = load_pytree(reload_from, like=r.params)
+            jax.block_until_ready(self.params)
+            rep.t_weights = time.perf_counter() - t0
+        elif self.owns_weights:
+            t0 = time.perf_counter()
+            self.params = jax.tree.map(
+                lambda a: jax.device_put(np.asarray(a)), r.params)
+            jax.block_until_ready(self.params)
+            rep.t_weights = time.perf_counter() - t0
+        else:
+            self.params = r.params
+
+        s = self.session
+        B, D = s.batch, r.cfg.d_model
+        x_av = jax.ShapeDtypeStruct((B, 1, D), jnp.float32)
+        tok_av = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_av = jax.ShapeDtypeStruct((), jnp.int32)
+        t_wall0 = time.perf_counter()
+        t0 = time.perf_counter()
+        self.embed_fn = r.executable("embed", 0, 0, self.params, tok_av,
+                                     fresh=cold)
+        self.edge_fn = r.executable(
+            "decode", 0, self._u_edge, self.params, x_av,
+            s.subset(0, self._u_edge), pos_av, fresh=cold)
+        rep.t_compile_edge = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        self.cloud_fn = r.executable(
+            "decode", self._u_edge, self._u_all, self.params, x_av,
+            s.subset(self._u_edge, self._u_all), pos_av, fresh=cold)
+        self.head_fn = r.executable("head", 0, 0, self.params, x_av,
+                                    fresh=cold)
+        rep.t_compile_cloud = time.perf_counter() - t0
+        rep.t_wall = rep.t_weights + (time.perf_counter() - t_wall0)
+        return rep
+
+    @property
+    def ready(self) -> bool:
+        return self.edge_fn is not None
+
+    def close(self) -> None:
+        self.embed_fn = self.edge_fn = self.cloud_fn = self.head_fn = None
+        self.params = None
+
+    # -- serve -----------------------------------------------------------
+    def _step(self, token, cache_edge, cache_cloud, pos):
+        """One decode step through both stages; returns everything the
+        session needs to commit, plus the measured stage timing."""
+        t0 = time.perf_counter()
+        x = self.embed_fn(self.params, token)
+        xe, new_e, b_e = self.edge_fn(self.params, x, cache_edge, pos)
+        jax.block_until_ready(xe)
+        t_edge = (time.perf_counter() - t0) * self.edge_scale
+        t_transfer = self.net.transfer_time(
+            int(np.prod(xe.shape)) * xe.dtype.itemsize)
+        t0 = time.perf_counter()
+        xc, new_c, b_c = self.cloud_fn(self.params, xe, cache_cloud, pos)
+        logits = self.head_fn(self.params, xc)
+        jax.block_until_ready(logits)
+        t_cloud = time.perf_counter() - t0
+        bounds = jnp.concatenate([b_e, b_c], axis=0)
+        return logits, {**new_e, **new_c}, bounds, \
+            RequestTiming(t_edge, t_transfer, t_cloud)
+
+    def process(self, inputs=None, *, batch: int = 1, seq=None
+                ) -> tuple:
+        """Serve one decode request: advance the session by one token."""
+        assert self.ready, "pipeline not built"
+        s = self.session
+        if s.pos >= self.runner.max_seq:
+            raise RuntimeError(f"decode context full ({s.pos} >= "
+                               f"max_seq {self.runner.max_seq})")
+        token = None
+        if isinstance(inputs, dict):
+            token = inputs.get("token")
+        if token is None:
+            token = s.next_token()
+        pos = jnp.int32(s.pos)
+        logits, new, bounds, timing = self._step(
+            jnp.asarray(token, jnp.int32), s.subset(0, self._u_edge),
+            s.subset(self._u_edge, self._u_all), pos)
+        s.commit_step(token, new, bounds, logits)
+        return logits, timing
+
+    def warm(self, sample_inputs=None) -> RequestTiming:
+        """Throwaway forward on SCRATCH state: absorbs the first-execution
+        spike without advancing (or touching) the live session."""
+        s = self.session
+        zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+        tok = jnp.zeros((s.batch, 1), jnp.int32)
+        _, _, _, timing = self._step(
+            tok, zeros(s.subset(0, self._u_edge)),
+            zeros(s.subset(self._u_edge, self._u_all)), jnp.int32(0))
+        return timing
+
+    # -- memory accounting ------------------------------------------------
+    def live_param_bytes(self) -> int:
+        if not self.ready:
+            return 0
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.params))
+
+
+# ---------------------------------------------------------------------------
+# pool: hand-off executes at activation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HandoffReport:
+    """One executed state hand-off (what ``plan_handoff`` only priced)."""
+    mode: str                 # 'transfer' | 'recompute' | 'none'
+    moved_layers: int
+    moved_bytes: int          # really-serialized bytes (transfer arm)
+    t_wall: float             # measured on-thread seconds
+    t_network: float          # priced link seconds (virtual, charged to
+                              # the stream by the engine)
+    plan: Optional[HandoffPlan]
+    epoch: int                # session epoch the hand-off synced to
+
+    @property
+    def total(self) -> float:
+        return self.t_wall + self.t_network
+
+
+class StatefulPipelinePool(PipelinePool):
+    """PipelinePool over ``StatefulEdgeCloudPipeline``s.
+
+    ``activate`` performs the state hand-off from the old active split to
+    the new one before the pointer swap; the arm is the live plan's
+    ``best`` unless ``force_mode`` pins it.  Entries carry the session
+    epoch they were last synced at; a stale entry is re-synced at swap —
+    the standby's compiled stages are reused, its view of the context is
+    not."""
+
+    def __init__(self, runner: StatefulStageRunner, net: NetworkModel,
+                 sample_inputs, *, session: DecodeSession,
+                 force_mode: Optional[str] = None, **kwargs):
+        super().__init__(runner, net, sample_inputs, **kwargs)
+        self.session = session
+        self.force_mode = force_mode
+        self.last_handoff: Optional[HandoffReport] = None
+        self.handoffs: List[HandoffReport] = []
+        self._paused_split: Optional[int] = None
+
+    def _new_pipeline(self, split: int, owns_weights: bool
+                      ) -> StatefulEdgeCloudPipeline:
+        return StatefulEdgeCloudPipeline(self.runner, split, self.net,
+                                         session=self.session,
+                                         owns_weights=owns_weights)
+
+    # -- hand-off ---------------------------------------------------------
+    def _execute_handoff(self, old_split: int, new_split: int
+                         ) -> HandoffReport:
+        s = self.session
+        if s.pos == 0 or old_split == new_split:
+            return HandoffReport("none", 0, 0, 0.0, 0.0, None, s.epoch)
+        plan = plan_handoff(s.cfg, old_split=old_split, new_split=new_split,
+                            seq_len=s.pos, batch=s.batch,
+                            net=s.handoff_net(self.net),
+                            target=s.calib_spec, act_bytes=4)
+        mode = self.force_mode or plan.best
+        lo, hi = min(old_split, new_split), max(old_split, new_split)
+        t0 = time.perf_counter()
+        if mode == "transfer":
+            payload, nbytes = s.export_layers(lo, hi)
+            s.import_layers(payload)
+            t_network = self.net.transfer_time(nbytes)
+        else:
+            s.recompute_layers(lo, hi)
+            nbytes, t_network = 0, 0.0
+        t_wall = time.perf_counter() - t0
+        return HandoffReport(mode, hi - lo, nbytes, t_wall, t_network,
+                             plan, s.epoch)
+
+    def take_last_handoff(self) -> Optional[HandoffReport]:
+        """Pop the hand-off the most recent activation executed (the
+        ``SwitchReport``-stamping contract of ``strategies.apply_handoff``)."""
+        with self._lock:
+            h, self.last_handoff = self.last_handoff, None
+        return h
+
+    # -- overridden lifecycle ---------------------------------------------
+    def pause(self):
+        with self._lock:
+            if self.active is not None:
+                self._paused_split = self.active.split
+            return super().pause()
+
+    def activate(self, key) -> float:
+        """Hand-off + pointer swap.  The returned ``t_switch`` INCLUDES
+        the hand-off's measured wall, so every strategy's own downtime /
+        t_blocked accounting sees it exactly once — the priced link
+        seconds (virtual) are the only part left for
+        ``strategies.apply_handoff`` to add."""
+        with self._lock:
+            old_split = self.active.split if self.active is not None \
+                else self._paused_split
+            entry = self._entries[key]
+            handoff = None
+            if old_split is not None and (
+                    old_split != entry.pipeline.split
+                    or entry.state_epoch != self.session.epoch):
+                # moved layers change sides; a stale same-split standby is
+                # re-synced (a no-move hand-off) rather than trusted
+                handoff = self._execute_handoff(old_split,
+                                                entry.pipeline.split)
+            t_switch = super().activate(key)
+            entry.state_epoch = self.session.epoch
+            self._paused_split = None
+            if handoff is not None:
+                self.last_handoff = handoff
+                self.handoffs.append(handoff)
+                t_switch += handoff.t_wall
+        return t_switch
+
+
+# ---------------------------------------------------------------------------
+# convenience constructor
+# ---------------------------------------------------------------------------
+
+def make_stateful_manager(cfg: ArchConfig, params=None, *, split: int,
+                          net: NetworkModel, prompt_len: int = 32,
+                          batch: int = 1, max_seq: int = 128, seed: int = 0,
+                          standby_split: Optional[int] = None,
+                          warm_standbys: bool = False,
+                          force_mode: Optional[str] = None,
+                          mem_budget_bytes: Optional[int] = None):
+    """A ``PipelineManager`` whose pool serves a stateful decode stream.
+
+    Prefills a seeded prompt so the session state (and its hand-off
+    surface) exists before the first pipeline builds.  Returns
+    ``(manager, session)``."""
+    from repro.core.switching import PipelineManager
+    if params is None:
+        params = T.init_model(cfg, jax.random.PRNGKey(seed))
+    runner = StatefulStageRunner(cfg, params, max_seq=max_seq)
+    session = DecodeSession(runner)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                (batch, prompt_len), 0, cfg.vocab_size)
+    session.prefill(tokens)
+    pool = StatefulPipelinePool(runner, net, {"tokens": tokens},
+                                session=session, force_mode=force_mode,
+                                warm_standbys=warm_standbys,
+                                mem_budget_bytes=mem_budget_bytes)
+    mgr = PipelineManager(runner, split, net, {"tokens": tokens},
+                          pool=pool, standby_split=standby_split)
+    return mgr, session

@@ -82,10 +82,41 @@ class SwitchReport:
     t_blocked: float = 0.0        # serving-thread time spent inside switch()
     t_background_wall: float = 0.0  # worker wall time for deferred builds;
                                     # filled in async — read after drain()
+    # stateful pipelines only (see repro.core.stateful): the executed
+    # KV/SSM state hand-off the switch's activation performed
+    t_handoff: float = 0.0        # measured wall + priced link seconds
+    handoff_bytes: int = 0        # really-serialized bytes (transfer arm)
+    handoff_mode: str = ""        # 'transfer' | 'recompute' | 'none'
 
 
 class StandbySplitMismatch(UserWarning):
     """Scenario A was asked for a split its standby was not built for."""
+
+
+def apply_handoff(pool: "PipelinePool", report: SwitchReport):
+    """Stamp the state hand-off a stateful pool executed during this
+    switch's activation onto the report.
+
+    Stateless pools have no ``take_last_handoff`` and are a no-op.  The
+    hand-off's measured WALL is already inside every strategy's own
+    downtime accounting (the stateful pool folds it into the ``t_switch``
+    its ``activate`` returns, and pause_resume's outage timer wraps the
+    activation outright), so only the PRICED link seconds — virtual time
+    no on-thread timer can see — are added to ``report.downtime`` here.
+    Called once per switch by the two switch owners
+    (``PipelineManager.repartition`` and ``ServingEngine.execute_switch``);
+    popping the hand-off keeps the stamp idempotent."""
+    take = getattr(pool, "take_last_handoff", None)
+    if take is None:
+        return None
+    handoff = take()
+    if handoff is None:
+        return None
+    report.t_handoff = handoff.total
+    report.handoff_bytes = handoff.moved_bytes
+    report.handoff_mode = handoff.mode
+    report.downtime += handoff.t_network
+    return handoff
 
 
 # ---------------------------------------------------------------------------

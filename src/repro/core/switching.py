@@ -35,7 +35,8 @@ from repro.core.network import NetworkModel
 from repro.core.pool import PipelinePool, PoolEntry, PoolKey
 from repro.core.stages import StageRunner
 from repro.core.strategies import (SwitchReport, SwitchStrategy,
-                                   available_strategies, get_strategy)
+                                   apply_handoff, available_strategies,
+                                   get_strategy)
 
 
 class PipelineManager:
@@ -46,12 +47,17 @@ class PipelineManager:
                  standby_split: Optional[int] = None,
                  standby_owns_weights: bool = True,
                  warm_standbys: bool = False,
-                 mem_budget_bytes: Optional[int] = None):
-        self.pool = PipelinePool(runner, net, sample_inputs,
-                                 checkpoint_path=checkpoint_path,
-                                 mem_budget_bytes=mem_budget_bytes,
-                                 standby_owns_weights=standby_owns_weights,
-                                 warm_standbys=warm_standbys)
+                 mem_budget_bytes: Optional[int] = None,
+                 pool: Optional[PipelinePool] = None):
+        # a pre-built pool (e.g. repro.core.stateful's session-carrying
+        # StatefulPipelinePool) is adopted as-is; the facade still owns
+        # activating the initial split and the strategy cache
+        self.pool = pool if pool is not None else PipelinePool(
+            runner, net, sample_inputs,
+            checkpoint_path=checkpoint_path,
+            mem_budget_bytes=mem_budget_bytes,
+            standby_owns_weights=standby_owns_weights,
+            warm_standbys=warm_standbys)
         entry, _ = self.pool.ensure(split, cold=False)
         self.pool.activate(entry.key)
         self._strategies: Dict[str, SwitchStrategy] = {}
@@ -100,7 +106,9 @@ class PipelineManager:
                     new_split: int, *, drain: bool = True) -> SwitchReport:
         if drain:
             self.pool.drain()       # settle background builds first
-        return self.get_strategy(strategy).switch(self.pool, new_split)
+        report = self.get_strategy(strategy).switch(self.pool, new_split)
+        apply_handoff(self.pool, report)   # stateful pools: stamp the
+        return report                      # executed state hand-off
 
     def drain(self, timeout=None) -> None:
         """Barrier: wait for all background builds; surface their failures."""

@@ -69,6 +69,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core.network import NetworkModel
+from repro.core.strategies import apply_handoff
 from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.timeline import (RequestRecord, ServiceTimeline,
                                     SwitchWindow)
@@ -189,6 +190,15 @@ class ServingEngine:
         w0 = time.perf_counter()
         report = strategy.switch(self.pool, new_split)
         self.clock.charge(time.perf_counter() - w0)
+        # stateful pipelines: the hand-off's measured wall is already in
+        # the charge above (it ran on this thread inside switch()); the
+        # priced link time for the serialized state never consumed wall,
+        # so it blocks the stream via sleep_until — a real sleep under
+        # WallClock (charge would be a no-op there), the same advance as
+        # charge under VirtualClock
+        handoff = apply_handoff(self.pool, report)
+        if handoff is not None and handoff.t_network > 0:
+            self.clock.sleep_until(self.clock.now() + handoff.t_network)
         t_end = self.clock.now()
         self._blocked_until = max(self._blocked_until, t_end)
         if report.full_outage:
@@ -200,7 +210,9 @@ class ServingEngine:
             full_outage=report.full_outage,
             old_split=old.split if old is not None else None,
             new_split=report.new_split, drained=len(inflight),
-            analytic_downtime=report.downtime))
+            analytic_downtime=report.downtime,
+            t_handoff=report.t_handoff,
+            handoff_mode=report.handoff_mode))
         self.reports.append(report)
         return report
 

@@ -4,7 +4,13 @@ batch, prefilled once, then decoded step-by-step.
 
 The NEUKONFIG pipeline (core/) is the *stage-parallel stateless* server the
 paper evaluates; this module is the conventional KV-cache server used by
-the serve example and by the KV-migration (beyond-paper) demo.
+the serve example and by the KV-migration (beyond-paper) demo:
+``run_batch(max_steps=...)`` stops an in-flight decode, ``export_state``
+serializes the batch (cache + per-request progress) to host-transferable
+numpy trees, and ``import_state`` on another server instance resumes it
+mid-stream — the KV hand-off the stateful repartitioning work
+(``repro.core.stateful``) performs per layer, here at whole-server
+granularity.
 """
 from __future__ import annotations
 
@@ -44,37 +50,83 @@ class BatchingServer:
             lambda p, t, c: T.decode_step(cfg, p, t, c,
                                           window=cfg.sliding_window,
                                           attn_impl=attn_impl))
+        self._cache = None          # in-flight decode state (for export)
+        self._tok = None
 
-    def run_batch(self, reqs: List[Request]) -> Dict[int, List[int]]:
+    def run_batch(self, reqs: List[Request], *,
+                  max_steps: Optional[int] = None,
+                  resume: bool = False) -> Dict[int, List[int]]:
+        """Prefill + decode a batch to completion.
+
+        ``max_steps`` stops after that many decode steps with the batch
+        state retained for ``export_state`` (mid-stream migration);
+        ``resume=True`` continues from state primed by ``import_state``
+        instead of prefilling."""
         cfg = self.cfg
-        B = len(reqs)
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt       # left-pad
-        inputs = {"tokens": jnp.asarray(toks)}
-        if cfg.frontend == "vision":
-            inputs["vision_embeds"] = jnp.zeros(
-                (B, cfg.frontend_tokens, cfg.d_model))
-        if cfg.frontend == "audio":
-            inputs["frames"] = jnp.zeros(
-                (B, cfg.encoder.context_len, cfg.d_model))
-        logits, cache = T.prefill(cfg, self.params, inputs,
-                                  max_seq=self.max_seq,
-                                  attn_impl=self.attn_impl)
+        if resume:
+            assert self._cache is not None, "import_state first"
+            cache, tok = self._cache, self._tok
+        else:
+            B = len(reqs)
+            plen = max(len(r.prompt) for r in reqs)
+            toks = np.zeros((B, plen), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+            inputs = {"tokens": jnp.asarray(toks)}
+            if cfg.frontend == "vision":
+                inputs["vision_embeds"] = jnp.zeros(
+                    (B, cfg.frontend_tokens, cfg.d_model))
+            if cfg.frontend == "audio":
+                inputs["frames"] = jnp.zeros(
+                    (B, cfg.encoder.context_len, cfg.d_model))
+            logits, cache = T.prefill(cfg, self.params, inputs,
+                                      max_seq=self.max_seq,
+                                      attn_impl=self.attn_impl)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for i, r in enumerate(reqs):
+                if not r.done:
+                    r.output.append(int(tok[i, 0]))
         steps = max(r.max_new_tokens for r in reqs)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        for i, r in enumerate(reqs):
-            if not r.done:
-                r.output.append(int(tok[i, 0]))
+        taken = 0
         for _ in range(steps - 1):
             if all(r.done for r in reqs):
                 # e.g. resumed requests arriving with partial output: no
                 # reason to burn `steps - 1` decode steps on a done batch
                 break
+            if max_steps is not None and taken >= max_steps:
+                break
             logits, cache = self._decode(self.params, tok, cache)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            taken += 1
             for i, r in enumerate(reqs):
                 if not r.done:
                     r.output.append(int(tok[i, 0]))
+        self._cache, self._tok = cache, tok
         return {r.rid: r.output for r in reqs}
+
+    # -- KV migration (beyond-paper demo) -----------------------------------
+    def export_state(self, reqs: List[Request]) -> Dict:
+        """Serialize the in-flight batch: decode cache, last sampled
+        token, and per-request progress — all host numpy, so the payload
+        can cross a link to another server instance."""
+        assert self._cache is not None, "no batch has run on this server"
+        return {
+            "cache": jax.tree.map(np.asarray, self._cache),
+            "tok": np.asarray(self._tok),
+            "reqs": [(r.rid, np.asarray(r.prompt), r.max_new_tokens,
+                      list(r.output)) for r in reqs],
+        }
+
+    def import_state(self, state: Dict) -> List[Request]:
+        """Adopt an ``export_state`` payload; returns the rebuilt request
+        batch, ready for ``run_batch(reqs, resume=True)``."""
+        self._cache = jax.tree.map(jnp.asarray, state["cache"])
+        self._tok = jnp.asarray(state["tok"])
+        return [Request(rid, prompt, max_new, output=list(out))
+                for rid, prompt, max_new, out in state["reqs"]]
+
+
+def state_nbytes(state: Dict) -> int:
+    """Payload size of an ``export_state`` tree (the migration's cost)."""
+    return sum(a.nbytes for a in jax.tree.leaves(state["cache"])
+               if hasattr(a, "nbytes")) + int(state["tok"].nbytes)

@@ -59,6 +59,9 @@ class SwitchWindow:
                                         # old pipeline during the switch
     analytic_downtime: float = 0.0      # SwitchReport.downtime, for the
                                         # measured-vs-analytic comparison
+    t_handoff: float = 0.0              # executed state hand-off seconds
+                                        # inside this window (stateful)
+    handoff_mode: str = ""              # 'transfer' | 'recompute' | ''
 
     @property
     def duration(self) -> float:

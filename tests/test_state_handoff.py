@@ -1,9 +1,30 @@
-"""State hand-off pricing (beyond-paper: stateful pipeline repartitioning)."""
+"""State hand-off: analytic pricing (plan_handoff) AND live execution
+(repro.core.stateful — serialized transfer / boundary-checkpoint
+recompute, measured on the stream)."""
+import dataclasses
+import warnings
+
+import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.core import NetworkModel, plan_handoff, per_layer_state_bytes
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    from _hypothesis_compat import hypothesis, st
 
+import jax
+
+from repro.configs import get_config
+from repro.core import (HandoffSplitClamped, NetworkModel,
+                        make_stateful_manager, per_layer_state_bytes,
+                        plan_handoff)
+from repro.serving import ServingEngine, VirtualClock, request_stream
+
+
+# ---------------------------------------------------------------------------
+# analytic pricing
+# ---------------------------------------------------------------------------
 
 def test_ssm_state_orders_of_magnitude_smaller_than_kv():
     falcon = get_config("falcon-mamba-7b")
@@ -40,3 +61,183 @@ def test_no_move_costs_nothing():
     p = plan_handoff(cfg, old_split=5, new_split=5, seq_len=1024, batch=1,
                      net=NetworkModel(20.0))
     assert p.moved_bytes == 0 and p.t_best == 0.0
+
+
+def test_out_of_range_splits_clamp_and_warn():
+    cfg = get_config("qwen2.5-3b")
+    net = NetworkModel(20.0)
+    with pytest.warns(HandoffSplitClamped):
+        clamped = plan_handoff(cfg, old_split=0,
+                               new_split=cfg.num_layers + 50,
+                               seq_len=1024, batch=1, net=net)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        exact = plan_handoff(cfg, old_split=0, new_split=cfg.num_layers,
+                             seq_len=1024, batch=1, net=net)
+    # an out-of-range split prices exactly like the full stack, instead
+    # of silently re-billing the last layer 50 more times
+    assert clamped.moved_layers == exact.moved_layers == cfg.num_layers
+    assert clamped.t_recompute == exact.t_recompute
+    assert clamped.moved_bytes == exact.moved_bytes
+    with pytest.warns(HandoffSplitClamped):
+        neg = plan_handoff(cfg, old_split=-7, new_split=3, seq_len=1024,
+                           batch=1, net=net)
+    assert neg.moved_layers == 3
+
+
+@hypothesis.given(st.integers(0, 80), st.integers(0, 80))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_t_recompute_monotone_in_moved_distance(a, b):
+    """t_recompute must grow (weakly) with |new_split - old_split|: a
+    uniform stack re-prefills one more layer per unit of distance."""
+    cfg = get_config("qwen2.5-3b")       # uniform attn stack
+    net = NetworkModel(20.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", HandoffSplitClamped)
+        wide = plan_handoff(cfg, old_split=a, new_split=b, seq_len=512,
+                            batch=1, net=net)
+        if a == b:
+            assert wide.t_recompute == 0.0
+            return
+        lo, hi = min(a, b), max(a, b)
+        narrow = plan_handoff(cfg, old_split=lo, new_split=hi - 1,
+                              seq_len=512, batch=1, net=net)
+    assert wide.t_recompute >= narrow.t_recompute
+
+
+# ---------------------------------------------------------------------------
+# executed hand-off (stateful pipelines)
+# ---------------------------------------------------------------------------
+
+def _mgr(arch, num_layers, *, bw=20.0, seed=0, **kw):
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              num_layers=num_layers)
+    return make_stateful_manager(cfg, split=1, net=NetworkModel(bw),
+                                 prompt_len=8, max_seq=64, seed=seed, **kw)
+
+
+@pytest.mark.parametrize("arch,num_layers",
+                         [("qwen2.5-3b", 2), ("falcon-mamba-7b", 2)])
+def test_export_import_roundtrip_identical_logits(arch, num_layers):
+    """Transfer arm: export -> import is byte-exact, so the next decode
+    step after a round trip produces bit-identical logits."""
+    mgr, session = _mgr(arch, num_layers)
+    mgr.active.process()                 # decode past the prompt
+    snap = session.snapshot()
+    logits_ref, _ = mgr.active.process()       # undisturbed next step
+    session.restore(snap)
+    payload, nbytes = session.export_layers(0, num_layers)
+    assert nbytes > 0
+    session.import_layers(payload)
+    logits_rt, _ = mgr.active.process()        # same step, after round trip
+    assert np.array_equal(np.asarray(logits_ref), np.asarray(logits_rt))
+    mgr.close()
+
+
+@pytest.mark.parametrize("arch,num_layers",
+                         [("qwen2.5-3b", 2), ("falcon-mamba-7b", 2),
+                          ("zamba2-7b", 4)])
+def test_recompute_reproduces_state(arch, num_layers):
+    """Recompute arm: re-prefilling from the boundary checkpoints lands
+    within float tolerance of the incrementally-built state, and the
+    next-token choice survives."""
+    mgr, session = _mgr(arch, num_layers)
+    for _ in range(3):
+        mgr.active.process()
+    tok_before = np.asarray(session.next_token())
+    before = {k: np.asarray(v) for k, v in session.cache.items()}
+    session.recompute_layers(0, num_layers)
+    for k, v in session.cache.items():
+        np.testing.assert_allclose(np.asarray(v), before[k], atol=1e-4,
+                                   err_msg=k)
+    assert np.array_equal(np.asarray(session.next_token()), tok_before)
+    mgr.close()
+
+
+def test_handoff_wall_lands_in_switch_window():
+    """A mid-stream stateful switch's SwitchWindow carries the executed
+    hand-off (mode + seconds) and its duration covers it — measured on
+    the VirtualClock stream, not derived."""
+    mgr, session = _mgr("falcon-mamba-7b", 2, warm_standbys=True)
+    eng = ServingEngine(mgr, clock=VirtualClock())
+    eng.schedule_switch(2.0, "switch_b2", 2, bandwidth_mbps=5.0)
+    tl = eng.run(request_stream({}, fps=2.0, duration=4.0))
+    assert len(tl.windows) == 1
+    w = tl.windows[0]
+    assert w.handoff_mode in ("transfer", "recompute")
+    assert w.t_handoff > 0.0
+    assert w.duration >= w.t_handoff * 0.5   # wall part is inside the window
+    rep = eng.reports[0]
+    assert rep.handoff_mode == w.handoff_mode
+    assert rep.t_handoff == w.t_handoff
+    assert rep.downtime >= rep.t_handoff
+    mgr.close()
+
+
+def test_drained_requests_kept_old_pipeline_state():
+    """In-flight decodes admitted before a switch drain on the OLD
+    pipeline: their records carry the old split, and the session context
+    they produced is preserved across the hand-off (token history grows
+    monotonically, no re-decode)."""
+    mgr, session = _mgr("qwen2.5-3b", 2, warm_standbys=True)
+    pos_prefill = session.pos
+    eng = ServingEngine(mgr, clock=VirtualClock())
+    eng.schedule_switch(2.0, "switch_b2", 2, bandwidth_mbps=5.0)
+    tl = eng.run(request_stream({}, fps=2.0, duration=4.0))
+    served = [r for r in tl.records if r.served]
+    assert served, "stream served nothing"
+    pre = [r for r in served if r.t_arrival < 2.0]
+    post = [r for r in served if r.t_arrival >= 2.0]
+    assert all(r.split == 1 for r in pre)     # old split, old state
+    assert any(r.split == 2 for r in post)    # new pipeline serves the rest
+    # every served request advanced the ONE session exactly once: nothing
+    # was replayed or lost across the hand-off
+    assert session.pos == pos_prefill + len(served)
+    drained = [r for r in tl.records if r.drained_in_switch]
+    assert all(r.split == 1 for r in drained if r.split is not None)
+    mgr.close()
+
+
+def test_standby_resync_via_state_epoch():
+    """A standby built at an old context epoch is re-synced at swap: the
+    pool entry's epoch is restamped to the session's current epoch."""
+    mgr, session = _mgr("qwen2.5-3b", 2, standby_split=2)
+    pool = mgr.pool
+    standby_key = pool.standby_key
+    built_epoch = pool.get(standby_key).state_epoch
+    for _ in range(3):                     # context moves on after the build
+        mgr.active.process()
+    assert session.epoch > built_epoch
+    mgr.repartition("switch_a", 2)
+    assert pool.get(standby_key).state_epoch == session.epoch
+    mgr.close()
+
+
+def test_switch_pool_picks_recompute_on_starved_link():
+    """switch_pool(k=1) on a stateful pool: when the trace drops to
+    1 Mbps the live plan must choose the recompute arm (shipping KV over
+    a starved link would dwarf re-prefilling)."""
+    mgr, session = _mgr("qwen2.5-3b", 2, bw=20.0)
+    strat = mgr.get_strategy("switch_pool(k=1)")
+    strat.prepare(mgr.pool, candidate_splits=(2, 1))
+    mgr.drain()
+    mgr.active.process()
+    mgr.set_network(NetworkModel(1.0))     # the trace drops to 1 Mbps
+    rep = mgr.repartition("switch_pool(k=1)", 2)
+    assert rep.handoff_mode == "recompute"
+    assert rep.t_handoff > 0.0
+    assert rep.handoff_bytes == 0          # nothing crossed the link
+    mgr.close()
+
+
+def test_transfer_bytes_match_serialized_state():
+    """The transfer arm's reported bytes are the really-serialized
+    payload, consistent with the per-layer accounting at f32."""
+    mgr, session = _mgr("qwen2.5-3b", 2, bw=100_000.0, force_mode="transfer")
+    mgr.active.process()
+    rep = mgr.repartition("switch_b2", 2)
+    assert rep.handoff_mode == "transfer"
+    expected = per_layer_state_bytes(session.cfg, seq_len=session.pos,
+                                     batch=session.batch, act_bytes=4)
+    assert rep.handoff_bytes == pytest.approx(expected, rel=0.01)
+    mgr.close()
