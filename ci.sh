@@ -37,6 +37,17 @@ fi
 
 run_py() { PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python "$@"; }
 
+# static analysis first: NK01-NK04 (lock/clock/tracing/registry
+# discipline) against the committed baseline — cheaper than any test and
+# fatal, so a lint regression fails before the suite spends minutes
+# compiling pipelines
+run_py -m repro.analysis src
+# generic lint rides along when ruff is installed (dev extra); the
+# container image does not ship it, so absence is not an error
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests
+fi
+
 run_py -m pytest -x -q "$@"
 
 if [[ "$TIER" == "2" ]]; then

@@ -1,0 +1,20 @@
+"""repro.analysis — static checks for the invariants the runtime relies on.
+
+``python -m repro.analysis src/`` lints the tree with four rule
+families (see ``docs/analysis.md``):
+
+* **NK01** lock discipline — ``@guarded_by`` attributes touched outside
+  their lock; lock-acquisition-order violations.
+* **NK02** clock discipline — raw ``time.perf_counter``-family calls
+  outside the sanctioned timing modules.
+* **NK03** JAX tracing hygiene — impure calls and host syncs inside
+  jitted/pallas functions; non-static ``static_argnums``.
+* **NK04** registry hygiene — duplicate registrations and unparseable
+  spec strings.
+
+Pure AST: never imports the code under analysis.
+"""
+from repro.analysis.core import (Finding, Module, Project, Rule, all_rules,
+                                 run_rules)
+
+__all__ = ["Finding", "Module", "Project", "Rule", "all_rules", "run_rules"]

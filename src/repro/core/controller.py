@@ -98,8 +98,6 @@ POLICIES.base = RepartitionPolicy
 class HysteresisPolicy(RepartitionPolicy):
     """Switch only when the relative latency gain clears ``min_gain``."""
 
-    name = "hysteresis"
-
     def __init__(self, min_gain: float = 0.05):
         self.min_gain = min_gain
 
@@ -120,8 +118,6 @@ class ImmediatePolicy(HysteresisPolicy):
 @register_policy("cooldown")
 class CooldownPolicy(RepartitionPolicy):
     """Rate-limit switching: at most one repartition per window."""
-
-    name = "cooldown"
 
     def __init__(self, cooldown_s: float = 10.0):
         self.cooldown_s = cooldown_s

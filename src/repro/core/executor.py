@@ -26,15 +26,19 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 import warnings
 from typing import Any, Callable, List, Optional
+
+from repro.core import timing
+from repro.core.concurrency import (RANK_EXECUTOR, RANK_HANDLE, guarded_by,
+                                    make_lock)
 
 
 class BackgroundBuildFailed(UserWarning):
     """A background pipeline build raised; service continuity is unaffected."""
 
 
+@guarded_by("_cb_lock", "_callbacks", "_completed", rank=RANK_HANDLE)
 class BuildHandle:
     """Future-like handle for one submitted build job."""
 
@@ -43,12 +47,12 @@ class BuildHandle:
         self.key = key
         self.result: Any = None
         self.error: Optional[BaseException] = None
-        self.t_submit = time.perf_counter()
+        self.t_submit = timing.now()
         self.t_wall = 0.0           # execution wall time (on the worker)
         self._event = threading.Event()
         self._completed = False     # job body finished (callbacks may still run)
         self._callbacks: List[Callable[["BuildHandle"], None]] = []
-        self._cb_lock = threading.Lock()
+        self._cb_lock = make_lock("build-handle", RANK_HANDLE)
 
     @property
     def done(self) -> bool:
@@ -79,12 +83,12 @@ class BuildHandle:
 
     # -- worker side -----------------------------------------------------
     def _run(self) -> None:
-        t0 = time.perf_counter()
+        sw = timing.Stopwatch()
         try:
             self.result = self.fn()
         except BaseException as e:          # surfaced later, never fatal
             self.error = e
-        self.t_wall = time.perf_counter() - t0
+        self.t_wall = sw.elapsed()
         with self._cb_lock:
             self._completed = True
             callbacks, self._callbacks = self._callbacks, []
@@ -100,6 +104,8 @@ class BuildHandle:
         self._event.set()
 
 
+@guarded_by("_lock", "_outstanding", "_shutdown", "_thread",
+            rank=RANK_EXECUTOR, aliases=("_idle",))
 class BuildExecutor:
     """Single background worker that runs build jobs FIFO.
 
@@ -114,7 +120,7 @@ class BuildExecutor:
         self.inline = inline
         self._q: "queue.SimpleQueue[Optional[BuildHandle]]" = queue.SimpleQueue()
         self._thread: Optional[threading.Thread] = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("executor", RANK_EXECUTOR)
         self._outstanding = 0
         self._idle = threading.Condition(self._lock)
         self._shutdown = False
@@ -133,7 +139,7 @@ class BuildExecutor:
         self._q.put(handle)
         return handle
 
-    def _ensure_worker(self) -> None:
+    def _ensure_worker(self) -> None:   # holds: _lock
         if self._thread is None or not self._thread.is_alive():
             self._thread = threading.Thread(target=self._loop, name=self.name,
                                             daemon=True)
@@ -157,6 +163,7 @@ class BuildExecutor:
         if self.inline:
             return True
         with self._idle:
+            # nk: allow[NK01]: wait_for runs the predicate with the lock held
             return self._idle.wait_for(lambda: self._outstanding == 0,
                                        timeout=timeout)
 
@@ -165,6 +172,7 @@ class BuildExecutor:
             self.drain()
         with self._lock:
             self._shutdown = True
-        if self._thread is not None and self._thread.is_alive():
+            thread = self._thread
+        if thread is not None and thread.is_alive():
             self._q.put(None)
-            self._thread.join(timeout=5.0)
+            thread.join(timeout=5.0)

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import os
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
@@ -25,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC
+from repro.core.timing import Stopwatch
 from repro.core.network import NetworkModel
 from repro.core.stages import StageRunner, abstractify, aval_fingerprint
 
@@ -102,33 +102,33 @@ class EdgeCloudPipeline:
         r = self.runner
         if reload_from is not None:
             from repro.checkpoint import load_pytree
-            t0 = time.perf_counter()
+            sw = Stopwatch()
             self.params = load_pytree(reload_from, like=r.params)
             jax.block_until_ready(self.params)
-            rep.t_weights = time.perf_counter() - t0
+            rep.t_weights = sw.elapsed()
         elif self.owns_weights:
-            t0 = time.perf_counter()
+            sw = Stopwatch()
             self.params = jax.tree.map(
                 lambda a: jax.device_put(np.asarray(a)), r.params)
             jax.block_until_ready(self.params)
-            rep.t_weights = time.perf_counter() - t0
+            rep.t_weights = sw.elapsed()
         else:
             self.params = r.params
 
         lo_e, hi_e = 0, self.split + 1
         lo_c, hi_c = self.split + 1, r.num_units
-        t_wall0 = time.perf_counter()
+        sw_wall = Stopwatch()
         in_avals = abstractify(sample_inputs)
         edge_box: Dict[str, Any] = {}
 
         def _compile_edge():
-            t0 = time.perf_counter()
+            sw_edge = Stopwatch()
             try:
                 edge_box["fn"] = r.stage_executable(
                     lo_e, hi_e, self.params, in_avals, fresh=cold)
             except BaseException as e:
                 edge_box["error"] = e
-            rep.t_compile_edge = time.perf_counter() - t0
+            rep.t_compile_edge = sw_edge.elapsed()
 
         # edge compiles on a helper thread while this thread derives the
         # boundary aval (an eval_shape trace — the sample never executes)
@@ -139,11 +139,11 @@ class EdgeCloudPipeline:
             th = threading.Thread(target=_compile_edge,
                                   name="edge-stage-compile")
             th.start()
-        t0 = time.perf_counter()
+        sw_cloud = Stopwatch()
         mid_avals = r.stage_out_avals(lo_e, hi_e, self.params, in_avals)
         cloud_fn = r.stage_executable(lo_c, hi_c, self.params, mid_avals,
                                       fresh=cold)
-        rep.t_compile_cloud = time.perf_counter() - t0
+        rep.t_compile_cloud = sw_cloud.elapsed()
         if th is not None:
             th.join()
         else:
@@ -153,7 +153,7 @@ class EdgeCloudPipeline:
         self.edge_fn, self.cloud_fn = edge_box["fn"], cloud_fn
         self._edge_avals = aval_fingerprint(in_avals)
         self._cloud_avals = aval_fingerprint(mid_avals)
-        rep.t_wall = rep.t_weights + (time.perf_counter() - t_wall0)
+        rep.t_wall = rep.t_weights + sw_wall.elapsed()
         return rep
 
     def warm(self, sample_inputs) -> RequestTiming:
@@ -213,18 +213,18 @@ class EdgeCloudPipeline:
     def process(self, inputs, *, batch: int = 1, seq: Optional[int] = None
                 ) -> tuple[Any, RequestTiming]:
         assert self.ready, "pipeline not built"
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         h = self._run_edge(inputs)
         jax.block_until_ready(h)
-        t_edge = (time.perf_counter() - t0) * self.edge_scale
+        t_edge = sw.elapsed() * self.edge_scale
         if seq is None:
             seq = inputs["tokens"].shape[1] if "tokens" in inputs else 1
         bbytes = self.runner.boundary_bytes(self.split, batch, seq)
         t_transfer = self.net.transfer_time(bbytes)
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         out = self._run_cloud(h)
         jax.block_until_ready(out)
-        t_cloud = time.perf_counter() - t0
+        t_cloud = sw.elapsed()
         return out["logits"], RequestTiming(t_edge, t_transfer, t_cloud)
 
     # -- memory accounting (Table I) --------------------------------------

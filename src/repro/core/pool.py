@@ -40,12 +40,12 @@ from __future__ import annotations
 
 import os
 import tempfile
-import threading
-import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro.core import timing
+from repro.core.concurrency import RANK_POOL, guarded_by, make_lock
 from repro.core.executor import (BackgroundBuildFailed, BuildExecutor,
                                  BuildHandle)
 from repro.core.network import NetworkModel
@@ -80,6 +80,9 @@ class PoolEntry:
         return self.pipeline.live_param_bytes() if self.owns_weights else 0
 
 
+@guarded_by("_lock", "_entries", "_pending", "_build_failures",
+            "_standby_handle", "_executor", "_clock",
+            "active_key", "standby_key", rank=RANK_POOL)
 class PipelinePool:
     """Owns N built pipelines plus the checkpoint Pause-and-Resume reloads."""
 
@@ -107,7 +110,7 @@ class PipelinePool:
         self.active_key: Optional[PoolKey] = None
         self.standby_key: Optional[PoolKey] = None
         self._checkpoint_path = checkpoint_path
-        self._lock = threading.RLock()
+        self._lock = make_lock("pool", RANK_POOL)
         self._executor = executor
         self._pending: Dict[PoolKey, BuildHandle] = {}
         self._standby_handle: Optional[BuildHandle] = None
@@ -135,21 +138,25 @@ class PipelinePool:
 
     # -- bookkeeping -------------------------------------------------------
     def __contains__(self, key: PoolKey) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def keys(self) -> Iterator[PoolKey]:
         with self._lock:
             return iter(list(self._entries))
 
     def has(self, split: int, owns_weights: bool = False) -> bool:
-        e = self._entries.get((split, owns_weights))
-        return e is not None and e.pipeline.ready
+        with self._lock:
+            e = self._entries.get((split, owns_weights))
+            return e is not None and e.pipeline.ready
 
     def get(self, key: PoolKey) -> Optional[PoolEntry]:
-        return self._entries.get(key)
+        with self._lock:
+            return self._entries.get(key)
 
     def _touch(self, entry: PoolEntry) -> None:
         with self._lock:
@@ -158,8 +165,10 @@ class PipelinePool:
 
     @property
     def active(self) -> Optional[EdgeCloudPipeline]:
-        e = self._entries.get(self.active_key) if self.active_key else None
-        return e.pipeline if e else None
+        with self._lock:
+            e = self._entries.get(self.active_key) if self.active_key \
+                else None
+            return e.pipeline if e else None
 
     def snapshot_active(self) -> Optional[PoolEntry]:
         """Atomic read of the active entry for request admission.
@@ -184,8 +193,21 @@ class PipelinePool:
 
     @property
     def standby(self) -> Optional[EdgeCloudPipeline]:
-        e = self._entries.get(self.standby_key) if self.standby_key else None
-        return e.pipeline if e else None
+        with self._lock:
+            e = self._entries.get(self.standby_key) if self.standby_key \
+                else None
+            return e.pipeline if e else None
+
+    @property
+    def standby_attempted(self) -> bool:
+        """True once any standby build was started (landed or in flight).
+
+        The locked accessor strategies use instead of peeking at
+        ``_standby_handle``/``standby_key`` directly.
+        """
+        with self._lock:
+            return self._standby_handle is not None \
+                or self.standby_key is not None
 
     def set_network(self, net: NetworkModel) -> None:
         with self._lock:
@@ -251,7 +273,7 @@ class PipelinePool:
                       owns_weights: Optional[bool] = None) -> float:
         """(Re)build the Scenario-A standby; returns wall-clock build time."""
         ow = self.resolve_standby_ownership(owns_weights)
-        t0 = time.perf_counter()
+        sw = timing.Stopwatch()
         entry, _ = self.ensure(split, owns_weights=ow, cold=ow, reuse=False)
         with self._lock:
             # arm the standby BEFORE warming: eviction treats the standby
@@ -260,13 +282,14 @@ class PipelinePool:
             self.standby_key = entry.key
         if self.warm_standbys:
             entry.pipeline.warm(self.sample_inputs)
-        return time.perf_counter() - t0
+        return sw.elapsed()
 
     # -- background builds -------------------------------------------------
     def pending(self, split: int, owns_weights: bool = False
                 ) -> Optional[BuildHandle]:
         """The in-flight build handle for a key, if any."""
-        return self._pending.get((split, owns_weights))
+        with self._lock:
+            return self._pending.get((split, owns_weights))
 
     def submit_build(self, split: int, *, owns_weights: bool = False,
                      cold: bool = False, reuse: bool = True,
@@ -348,11 +371,13 @@ class PipelinePool:
              timeout: Optional[float] = None) -> Optional[PoolEntry]:
         """Block until any in-flight build for the key lands; surface
         failures; return the entry (None if the build failed/was evicted)."""
-        handle = self._pending.get((split, owns_weights))
+        with self._lock:
+            handle = self._pending.get((split, owns_weights))
         if handle is not None:
             handle.wait(timeout)
         self._surface_failures()
-        return self._entries.get((split, owns_weights))
+        with self._lock:
+            return self._entries.get((split, owns_weights))
 
     def wait_standby(self, timeout: Optional[float] = None
                      ) -> Optional[EdgeCloudPipeline]:
@@ -361,7 +386,8 @@ class PipelinePool:
         Waits on the build *handle* (which completes strictly after
         ``standby_key`` is set), so a ready standby is visible on return.
         """
-        handle = self._standby_handle
+        with self._lock:
+            handle = self._standby_handle
         if handle is not None:
             handle.wait(timeout)
         self._surface_failures()
@@ -370,7 +396,7 @@ class PipelinePool:
     def drain(self, timeout: Optional[float] = None) -> None:
         """Deterministic barrier: wait for every pending build, then warn
         (on this thread) for any that failed."""
-        deadline = None if timeout is None else time.perf_counter() + timeout
+        deadline = None if timeout is None else timing.now() + timeout
         while True:
             with self._lock:
                 handles = list(self._pending.values())
@@ -378,10 +404,10 @@ class PipelinePool:
                 break
             for h in handles:
                 left = None if deadline is None \
-                    else max(0.0, deadline - time.perf_counter())
+                    else max(0.0, deadline - timing.now())
                 if not h.wait(left) and deadline is not None:
                     break
-            if deadline is not None and time.perf_counter() >= deadline:
+            if deadline is not None and timing.now() >= deadline:
                 break
         self._surface_failures()
 
@@ -417,9 +443,9 @@ class PipelinePool:
         with self._lock:
             entry = self._entries[key]
             assert entry.pipeline.ready, f"pipeline {key} not built"
-            t0 = time.perf_counter()
+            sw = timing.Stopwatch()
             self.active_key = key
-            t_switch = time.perf_counter() - t0
+            t_switch = sw.elapsed()
             if self.standby_key == key:
                 self.standby_key = None
             self._touch(entry)
@@ -487,6 +513,7 @@ class PipelinePool:
                      if k != self.active_key and k != keep
                      and (k not in self._pending or k in reap_pending)
                      and e.charged_bytes > 0),
+                    # nk: allow[NK01]: sorted() runs the lambda under _lock
                     key=lambda e: (e.key == self.standby_key, e.last_used))
                 if not victims:
                     if keep is None and not self._pending:

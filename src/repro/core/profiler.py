@@ -12,7 +12,6 @@ cited methods:
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -21,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, CNNConfig
+from repro.core.timing import Stopwatch
 from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, DeviceSpec
 from repro.core.network import NetworkModel
 
@@ -90,11 +90,11 @@ class ModelProfile:
 def _time_fn(fn, *args, reps=3) -> float:
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    return sw.elapsed() / reps
 
 
 def profile_cnn(cfg: CNNConfig, params, units, shapes, *, batch=1,

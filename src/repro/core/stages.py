@@ -23,7 +23,6 @@ background build threads and the serving thread compile concurrently.
 from __future__ import annotations
 
 import functools
-import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.concurrency import RANK_STAGE_CACHE, guarded_by, make_lock
 from repro.models import layers as Lyr
 from repro.models import ssm as SSM
 from repro.models import transformer as T
@@ -54,6 +54,8 @@ def aval_fingerprint(tree) -> Tuple:
                                    for l in leaves)
 
 
+@guarded_by("_cache_lock", "_jit_cache", "_aot_cache", "_aval_cache",
+            rank=RANK_STAGE_CACHE, init_methods=("_init_stage_caches",))
 class _CompiledStageCache:
     """Warm-path stage compilation shared by every stage-runner flavour.
 
@@ -66,7 +68,7 @@ class _CompiledStageCache:
         self._jit_cache: Dict[Tuple[int, int], Any] = {}
         self._aot_cache: Dict[Tuple, Any] = {}
         self._aval_cache: Dict[Tuple, Any] = {}
-        self._cache_lock = threading.RLock()
+        self._cache_lock = make_lock("stage-cache", RANK_STAGE_CACHE)
 
     def stage_fn(self, lo: int, hi: int):
         """Warm path: cached jitted callable (Dynamic Switching, same

@@ -55,11 +55,11 @@ from __future__ import annotations
 import ast
 import collections
 import re
-import time
 import warnings
 from dataclasses import dataclass
 from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core import timing
 from repro.core.network import NetworkModel
 from repro.core.partitioner import optimal_split
 from repro.core.pipeline import BuildReport
@@ -298,7 +298,7 @@ class PauseResumeStrategy(SwitchStrategy):
         old_key = pool.active_key
         old = pool.active.split
         ckpt = pool.checkpoint_path      # lazy write happens OUTSIDE t_update
-        t0 = time.perf_counter()
+        sw = timing.Stopwatch()
         pool.pause()                                       # (ii) pause
         try:
             entry, _ = pool.ensure(new_split, cold=True,   # (iii) update
@@ -310,7 +310,7 @@ class PauseResumeStrategy(SwitchStrategy):
             # outage: fall back to the previous pipeline
             if pool.active is None and old_key is not None and old_key in pool:
                 pool.activate(old_key)
-        dt = time.perf_counter() - t0
+        dt = sw.elapsed()
         return SwitchReport("pause_resume", old, new_split, downtime=dt,
                             t_build=entry.report.total, full_outage=True,
                             build_detail=entry.report, t_blocked=dt)
@@ -332,19 +332,19 @@ class ScenarioAStrategy(SwitchStrategy):
                 return
 
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
-        t_begin = time.perf_counter()
+        sw_blocked = timing.Stopwatch()
         standby = pool.standby
         if standby is None or not standby.ready:
             # a previous switch's standby rebuild may still be in flight —
             # await it rather than failing (counts toward t_blocked)
             standby = pool.wait_standby()
         if standby is None or not standby.ready:
-            if self._standby_was_attempted(pool):
+            if pool.standby_attempted:
                 # the background rebuild failed (already surfaced as a
                 # BackgroundBuildFailed warning): availability wins over
                 # the Scenario-A mechanism — degrade to a B2-style warm
                 # build instead of taking the service down
-                return self._degraded_switch(pool, new_split, t_begin)
+                return self._degraded_switch(pool, new_split, sw_blocked)
             raise RuntimeError(
                 "Scenario A requires the always-running standby pipeline")
         old = pool.active.split
@@ -361,7 +361,7 @@ class ScenarioAStrategy(SwitchStrategy):
         if t_switch is None:
             # the standby was reaped between the readiness check and the
             # swap (concurrent build landing + eviction): keep serving
-            return self._degraded_switch(pool, requested, t_begin)
+            return self._degraded_switch(pool, requested, sw_blocked)
         rep = SwitchReport("switch_a", old, new_split, downtime=t_switch,
                            t_switch=t_switch, cache_hit=True, note=note)
         # background: rebuild the redundant pipeline for the *old* config on
@@ -374,26 +374,22 @@ class ScenarioAStrategy(SwitchStrategy):
 
         pool.submit_build(old, owns_weights=ow, cold=ow, reuse=False,
                           standby=True, on_done=_done)
-        rep.t_blocked = time.perf_counter() - t_begin
+        rep.t_blocked = sw_blocked.elapsed()
         return rep
 
-    @staticmethod
-    def _standby_was_attempted(pool: PipelinePool) -> bool:
-        """True when a standby rebuild ever ran (it may have failed, or its
-        entry may since have been evicted under memory pressure) — degrade
-        gracefully in either case.  Never-configured stays a hard error: it
-        is a deployment mistake, not a runtime condition."""
-        return pool._standby_handle is not None
-
     def _degraded_switch(self, pool: PipelinePool, new_split: int,
-                         t_begin: float) -> SwitchReport:
+                         sw_blocked: timing.Stopwatch) -> SwitchReport:
+        """Availability fallback when a standby rebuild ever ran but its
+        result is unusable (failed, or evicted under memory pressure).
+        Never-configured stays a hard error in ``switch``: it is a
+        deployment mistake, not a runtime condition."""
         old = pool.active.split
         note = ("standby unavailable (failed background rebuild or evicted "
                 "mid-switch); fell back to a warm build")
         warnings.warn(note, StandbySplitMismatch)
-        t0 = time.perf_counter()
+        sw = timing.Stopwatch()
         entry, _ = pool.ensure(new_split, owns_weights=False, cold=False)
-        t_build = time.perf_counter() - t0
+        t_build = sw.elapsed()
         t_switch = pool.activate(entry.key)
         ow = pool.resolve_standby_ownership(self.owns_weights)
         pool.submit_build(old, owns_weights=ow, cold=ow, reuse=False,
@@ -402,7 +398,7 @@ class ScenarioAStrategy(SwitchStrategy):
                            downtime=t_build + t_switch, t_build=t_build,
                            t_switch=t_switch, build_detail=entry.report,
                            note=note)
-        rep.t_blocked = time.perf_counter() - t_begin
+        rep.t_blocked = sw_blocked.elapsed()
         return rep
 
 
@@ -413,10 +409,10 @@ class ScenarioB1Strategy(SwitchStrategy):
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
         old_key = pool.active_key
         old = pool.active.split
-        t0 = time.perf_counter()
+        sw = timing.Stopwatch()
         entry, _ = pool.ensure(new_split, owns_weights=True, cold=True,
                                reuse=False)                # new container
-        t_build = time.perf_counter() - t0
+        t_build = sw.elapsed()
         t_switch = pool.activate(entry.key)                # redirect
         if old_key is not None and old_key != entry.key:
             pool.release(old_key)                          # reap old container
@@ -432,10 +428,10 @@ class ScenarioB2Strategy(SwitchStrategy):
 
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
         old = pool.active.split
-        t0 = time.perf_counter()
+        sw = timing.Stopwatch()
         entry, _ = pool.ensure(new_split, owns_weights=False, cold=False,
                                reuse=False)                # same container
-        t_build = time.perf_counter() - t0
+        t_build = sw.elapsed()
         t_switch = pool.activate(entry.key)
         return SwitchReport("switch_b2", old, new_split,
                             downtime=t_build + t_switch, t_build=t_build,
@@ -535,7 +531,7 @@ class SwitchPoolStrategy(SwitchStrategy):
         return cands[:self.k]
 
     def switch(self, pool: PipelinePool, new_split: int) -> SwitchReport:
-        t_begin = time.perf_counter()
+        sw_blocked = timing.Stopwatch()
         old = pool.active.split
         if pool.net is not None:
             bw = pool.net.bandwidth_mbps
@@ -555,9 +551,9 @@ class SwitchPoolStrategy(SwitchStrategy):
         if not hit and pool.pending(new_split, self.owns_weights) is not None:
             # the speculative build for exactly this key is in flight:
             # await it instead of duplicating the work
-            t0 = time.perf_counter()
+            sw = timing.Stopwatch()
             entry = pool.wait(new_split, self.owns_weights)
-            t_build = time.perf_counter() - t0
+            t_build = sw.elapsed()
             if entry is not None:
                 t_switch = pool.try_activate(entry.key)
                 if t_switch is not None:
@@ -566,10 +562,10 @@ class SwitchPoolStrategy(SwitchStrategy):
                     detail = entry.report
                     downtime = t_build + t_switch
         if not hit:                               # miss: B2-style warm build
-            t0 = time.perf_counter()
+            sw = timing.Stopwatch()
             entry, _ = pool.ensure(new_split, owns_weights=False,
                                    cold=False, reuse=False)
-            t_build += time.perf_counter() - t0
+            t_build += sw.elapsed()
             t_switch = pool.activate(entry.key)
             detail = entry.report
             downtime = t_build + t_switch
@@ -578,7 +574,7 @@ class SwitchPoolStrategy(SwitchStrategy):
                            t_build=t_build, t_switch=t_switch,
                            build_detail=detail, cache_hit=hit, note=note)
         self._speculate(pool, rep)
-        rep.t_blocked = time.perf_counter() - t_begin
+        rep.t_blocked = sw_blocked.elapsed()
         return rep
 
     def _speculate(self, pool: PipelinePool,

@@ -92,6 +92,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     Sk, KH = k.shape[1], k.shape[2]
     G = H // KH
     if interpret is None:
+        # nk: allow[NK03]: per-backend constant is deliberate (interpret on CPU)
         interpret = jax.default_backend() == "cpu"
     block_q = min(block_q, max(Sq, 8))
     block_k = min(block_k, max(Sk, 8))

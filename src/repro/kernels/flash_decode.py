@@ -75,6 +75,7 @@ def flash_decode_attention(q, k_cache, v_cache, *, pos, block_k=512,
     KH, S = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
     if interpret is None:
+        # nk: allow[NK03]: per-backend constant is deliberate (interpret on CPU)
         interpret = jax.default_backend() == "cpu"
     block_k = min(block_k, S)
     nb = -(-S // block_k)

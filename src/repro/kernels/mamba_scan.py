@@ -59,6 +59,7 @@ def mamba1_scan(dt, Bc, Cc, x, A, h0=None, *, chunk=256, block_d=512,
     B, S, Di = x.shape
     N = Bc.shape[-1]
     if interpret is None:
+        # nk: allow[NK03]: per-backend constant is deliberate (interpret on CPU)
         interpret = jax.default_backend() == "cpu"
     if h0 is None:
         h0 = jnp.zeros((B, Di, N), jnp.float32)

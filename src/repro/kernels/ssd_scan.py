@@ -72,6 +72,7 @@ def ssd_scan(dt, Bc, Cc, x, A, h0=None, *, chunk=128, interpret=None):
     B, S, H = dt.shape
     P, N = x.shape[-1], Bc.shape[-1]
     if interpret is None:
+        # nk: allow[NK03]: per-backend constant is deliberate (interpret on CPU)
         interpret = jax.default_backend() == "cpu"
     if h0 is None:
         h0 = jnp.zeros((B, H, P, N), jnp.float32)

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import time
 
+from repro.core import timing
+
 # one nanosecond: the grid stream timestamps are quantised to (below)
 TICK_S = 1e-9
 
@@ -47,6 +49,21 @@ class Clock:
         """Account ``dt`` seconds of measured on-thread work (e.g. a
         switch that blocked the serving loop) on the stream clock."""
         raise NotImplementedError
+
+    def measure(self):
+        """Context manager timing a block of on-thread work and charging
+        its wall cost to this clock on exit (even if the block raises — a
+        failed switch still blocked the stream for as long as it ran)::
+
+            with clock.measure() as m:
+                strategy.switch(pool, split)
+            # m.wall = measured seconds, already charged
+
+        This is the sanctioned serving-path wall-measurement form: NK02
+        (``repro.analysis``) forbids raw ``time.perf_counter()`` exactly
+        so every measured cost provably lands on the stream clock.
+        """
+        return timing.measure(charge_to=self)
 
 
 class WallClock(Clock):

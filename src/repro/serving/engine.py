@@ -63,7 +63,6 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
@@ -187,9 +186,8 @@ class ServingEngine:
         old = self.pool.snapshot_active()
         self._prune_inflight(t_sw)          # whatever remains is in flight
         inflight = [rec for _, rec in self._inflight]
-        w0 = time.perf_counter()
-        report = strategy.switch(self.pool, new_split)
-        self.clock.charge(time.perf_counter() - w0)
+        with self.clock.measure():
+            report = strategy.switch(self.pool, new_split)
         # stateful pipelines: the hand-off's measured wall is already in
         # the charge above (it ran on this thread inside switch()); the
         # priced link time for the serialized state never consumed wall,

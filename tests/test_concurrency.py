@@ -1,0 +1,166 @@
+"""DebugLock: dynamic lock-order checking (the runtime twin of NK01) and
+regression tests for the lock-discipline fixes in pool/executor."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import BuildExecutor, NetworkModel, PipelinePool, StageRunner
+from repro.core.concurrency import (RANK_SESSION, DebugLock, LockOrderError,
+                                    debug_locks_enabled, make_lock)
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    runner = StageRunner(cfg, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+    return cfg, runner, {"tokens": toks}
+
+
+# ---------------------------------------------------------------------------
+# DebugLock semantics
+# ---------------------------------------------------------------------------
+
+def test_debug_locks_on_under_pytest():
+    assert debug_locks_enabled()
+    assert isinstance(make_lock("x", 1), DebugLock)
+
+
+def test_env_override_disables_checking(monkeypatch):
+    monkeypatch.setenv("NEUKONFIG_DEBUG_LOCKS", "0")
+    assert not debug_locks_enabled()
+    assert not isinstance(make_lock("x", 1), DebugLock)
+    monkeypatch.setenv("NEUKONFIG_DEBUG_LOCKS", "1")
+    assert isinstance(make_lock("x", 1), DebugLock)
+
+
+def test_increasing_rank_order_ok():
+    lo, hi = DebugLock("lo", 10), DebugLock("hi", 20)
+    with lo:
+        with hi:
+            with lo:          # reentrant: adds no ordering edge
+                pass
+
+
+def test_inversion_raises_at_the_acquire_site():
+    lo, hi = DebugLock("lo", 10), DebugLock("hi", 20)
+    with hi:
+        with pytest.raises(LockOrderError, match="inversion"):
+            lo.acquire()
+    # the failed acquire left no held-state behind
+    with lo:
+        with hi:
+            pass
+
+
+def test_equal_rank_also_inverts():
+    a, b = DebugLock("a", 10), DebugLock("b", 10)
+    with a:
+        with pytest.raises(LockOrderError):
+            b.acquire()
+
+
+def test_held_state_is_per_thread():
+    lo, hi = DebugLock("lo", 10), DebugLock("hi", 20)
+    errs = []
+
+    def other():
+        try:
+            with lo:
+                pass
+        except LockOrderError as e:       # pragma: no cover
+            errs.append(e)
+
+    with hi:
+        t = threading.Thread(target=other)
+        t.start()
+        t.join()
+    assert not errs
+
+
+def test_condition_protocol_wait_notify():
+    cond = threading.Condition(make_lock("cond", 30))
+    box = []
+
+    def producer():
+        time.sleep(0.05)
+        with cond:
+            box.append(1)
+            cond.notify_all()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    with cond:
+        assert cond.wait_for(lambda: box, timeout=10.0)
+    t.join()
+    # wait() restored held-state correctly: ordering still enforced after
+    lo = DebugLock("lo", 10)
+    with cond:
+        with pytest.raises(LockOrderError):
+            lo.acquire()
+
+
+# ---------------------------------------------------------------------------
+# regressions for the NK01 fixes
+# ---------------------------------------------------------------------------
+
+def test_pool_readers_take_the_pool_lock(setup):
+    """has/pending/active/len used to read the entry dict bare; they must
+    acquire the pool lock — observable as an inversion when called while
+    holding a higher-ranked lock."""
+    cfg, runner, inputs = setup
+    pool = PipelinePool(runner, NetworkModel(20.0), inputs)
+    leaf = make_lock("leaf", RANK_SESSION)
+    for access in (lambda: pool.has(1), lambda: pool.pending(1),
+                   lambda: pool.active, lambda: len(pool),
+                   lambda: pool.standby_attempted):
+        with leaf:
+            with pytest.raises(LockOrderError):
+                access()
+        access()                # and without the leaf lock held: fine
+
+
+def test_standby_attempted_tracks_handle_and_key(setup):
+    """switch_a's degraded-path probe goes through this accessor now
+    instead of poking pool._standby_handle from the strategy module."""
+    cfg, runner, inputs = setup
+    pool = PipelinePool(runner, NetworkModel(20.0), inputs)
+    assert not pool.standby_attempted
+    e, _ = pool.ensure(1)
+    pool.activate(e.key)
+    assert not pool.standby_attempted
+    pool.build_standby(2)
+    assert pool.standby_attempted
+
+
+def test_executor_shutdown_reads_thread_under_lock():
+    """shutdown() snapshots the worker thread under the lock and joins the
+    local outside it; repeated/raced shutdowns stay clean."""
+    ex = BuildExecutor()
+    h = ex.submit(lambda: time.sleep(0.05) or "done")
+    assert ex.drain(timeout=10.0)
+    assert h.result == "done"
+    ex.shutdown()
+    ex.shutdown()               # idempotent
+
+
+def test_whole_pool_lifecycle_under_debug_locks(setup):
+    """End-to-end: submit/wait/activate/evict with DebugLock active; any
+    rank inversion on these paths raises instead of deadlocking."""
+    cfg, runner, inputs = setup
+    pool = PipelinePool(runner, NetworkModel(20.0), inputs)
+    assert isinstance(pool._lock, DebugLock)
+    e, _ = pool.ensure(1)
+    pool.activate(e.key)
+    pool.submit_build(2, owns_weights=True, cold=True)
+    pool.drain()
+    assert pool.has(2, True)
+    pool.evict_to_budget()
+    out, _ = pool.active.process(inputs)
+    assert out.shape[-1] == cfg.vocab_size
