@@ -1,0 +1,242 @@
+"""Chaos grid: {fault plan x strategy} under deterministic fault injection.
+
+Every cell drives a full serving run (request stream on a quantised
+``VirtualClock``) through a ``SimPool`` (analytic build pricing, real
+``PipelinePool`` control plane) while a seeded ``FaultPlan`` injects one
+failure family:
+
+* ``none``        — control cell (no injectors);
+* ``build_fail``  — every pipeline build raises (p=1);
+* ``build_stall`` — every build wedges until ``plan.release()``: the
+  switch watchdog must abort + roll back instead of hanging the stream;
+* ``link_outage`` — the cloud link dies for 6 s mid-run: the circuit
+  breaker must enter edge-only degraded mode and recover (MTTR);
+* ``slow_cloud``  — keyed per-request cloud stragglers.
+
+Each cell runs TWICE with the same seed and the two
+``ServiceTimeline.serialize()`` strings must match byte-for-byte — the
+determinism contract (keyed fault draws + clock quantum absorbing
+scheduler jitter).  Cell metrics land in ``BENCH_chaos.json``
+(regression-guarded against ``BENCH_chaos_baseline.json``) and one JSONL
+row per cell in ``experiments/results``.
+
+``--smoke`` (ci.sh tier-2, fatal) additionally asserts the robustness
+story:
+
+* under ``build_fail(p=1)`` switch_a keeps serving with zero outage
+  drops (standby swap + warm-cache fallback) while pause_resume goes
+  dark (its pause landed before the build died: honest full outage);
+* under ``build_stall(p=1)`` no strategy wedges the run, every stalled
+  switch is watchdog-aborted and rolled back to the pre-switch split;
+* under ``link_outage`` every strategy enters + exits degraded mode
+  (closed ``DegradedWindow``, MTTR > 0) and drops nothing to
+  ``link_down``;
+* a corrupted stateful hand-off (real tiny model) is detected by the
+  checksum envelope and recovered via masked recompute with logits
+  bit-identical to a clean recompute run.
+
+    PYTHONPATH=src python -m benchmarks.chaos [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import warnings
+
+from benchmarks.downtime import _append_summary_jsonl, _run_id
+from repro.core.faults import faults
+from repro.core.network import BandwidthTrace, CircuitBreaker
+from repro.core.switching import PipelineManager
+from repro.serving.clock import VirtualClock
+from repro.serving.engine import ServingEngine, request_stream
+from repro.serving.sim import SimPool, SimRunner
+
+# one quantum absorbs scheduler jitter: a watchdog abort measures
+# WATCHDOG_S + fence grace (~0.35 s real) and always charges 2 quanta;
+# a fast switch (~ms real) always charges 1
+QUANTUM = 0.25
+WATCHDOG_S = 0.30
+DURATION = 20.0
+FPS = 2.0
+L = 8                     # SimRunner layers
+
+PLANS = {
+    "none": "",
+    "build_fail": "build_fail(p=1.0)",
+    "build_stall": "build_stall(p=1.0)",
+    "link_outage": "link_outage(at=6.0,dur=6.0)",
+    "slow_cloud": "slow_cloud(factor=6.0,p=0.3)",
+}
+STRATS = ("pause_resume", "switch_a", "switch_b2")
+
+# pre-switch split each strategy must be serving after a watchdog
+# rollback under build_stall (switch_a's FIRST switch is a standby swap
+# that needs no build, so only its second switch aborts)
+ROLLBACK_SPLIT = {"pause_resume": 2, "switch_b2": 2, "switch_a": 6}
+
+
+def run_cell(spec: str, strat: str, seed: int):
+    """One {plan x strategy} serving run; returns (metrics, serialized)."""
+    clock = VirtualClock(quantum=QUANTUM)
+    runner = SimRunner(L)
+    plan = faults(spec, seed=seed)
+    trace = plan.apply_to_trace(BandwidthTrace(steps=[(0.0, 20.0)]))
+    pool = SimPool(runner, trace.at(0.0), fault_plan=plan,
+                   mem_budget_bytes=runner.edge_param_bytes(L) * 2)
+    mgr = PipelineManager(runner, 2, trace.at(0.0), None, pool=pool,
+                          standby_split=6 if strat == "switch_a" else None)
+    pool.sim_clock = clock          # deployment-time builds above were free
+    eng = ServingEngine(mgr, clock=clock, switch_timeout_s=WATCHDOG_S,
+                        breaker=CircuitBreaker(), fault_plan=plan)
+    plan.arm()                      # open the valve only for the stream
+    eng.schedule_switch(3.0, strat, 6)
+    eng.schedule_switch(15.0, strat, 2)
+    for t in trace.change_points():
+        eng.schedule_network(t, trace.at(t).bandwidth_mbps)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            tl = eng.run(request_stream({"x": 0}, fps=FPS, duration=DURATION),
+                         duration=DURATION)
+        blob = tl.serialize()
+        s = tl.summary()
+        active = pool.snapshot_active()
+        drops = {}
+        for r in tl.records:
+            if r.drop_reason is not None:
+                drops[r.drop_reason] = drops.get(r.drop_reason, 0) + 1
+        metrics = {
+            "downtime_ms": s["downtime_ms"],
+            "served": s["served"],
+            "dropped": s["dropped"],
+            "outage_drops": drops.get("outage", 0),
+            "link_down_drops": drops.get("link_down", 0),
+            "busy_drops": drops.get("busy", 0),
+            "aborted": s["aborted_switches"],
+            "full_outage_windows": sum(1 for w in tl.windows
+                                       if w.full_outage),
+            "closed_degraded_windows": sum(1 for w in tl.degraded
+                                           if w.closed),
+            "degraded_s": s["degraded_s"],
+            "mttr_s": round(tl.mttr() or 0.0, 6),
+            "p99_ms": s["p99_ms"],
+            "t_end": tl.t_end,
+            "final_split": active.split if active is not None else -1,
+        }
+    finally:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")     # zombie-build failures
+            plan.release()          # let stalled build zombies exit
+            mgr.close()
+    return metrics, blob
+
+
+def corruption_check(seed: int = 0) -> dict:
+    """Hand-off integrity on a REAL (tiny) stateful model: a corrupted
+    transfer payload must be detected by the checksum envelope, recovered
+    via masked recompute, and land bit-identical to a clean recompute."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.network import NetworkModel
+    from repro.core.stateful import (HandoffIntegrityWarning,
+                                     make_stateful_manager)
+
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(),
+                              num_layers=2)
+    logits = {}
+    for mode, corrupt in (("recompute", False), ("transfer", True)):
+        mgr, session = make_stateful_manager(
+            cfg, split=1, net=NetworkModel(1000.0), prompt_len=8,
+            max_seq=64, seed=seed, force_mode=mode)
+        fallback = False
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            if corrupt:
+                mgr.pool.fault_plan = faults("handoff_corrupt(p=1.0)",
+                                             seed=seed).arm()
+            mgr.repartition("switch_b2", cfg.num_layers)
+        handoff = mgr.pool.handoffs[-1]
+        if corrupt:
+            assert any(issubclass(w.category, HandoffIntegrityWarning)
+                       for w in caught), "corruption went undetected"
+            assert handoff.fallback, "no recompute fallback recorded"
+            fallback = True
+        assert handoff.mode == "recompute", handoff.mode
+        out, _ = mgr.active.process()
+        logits[mode] = np.asarray(out)
+        mgr.close()
+    assert np.array_equal(logits["recompute"], logits["transfer"]), \
+        "post-recovery logits differ from a clean recompute run"
+    return {"detected": True, "fallback": fallback,
+            "logits_bit_identical": True}
+
+
+def run(smoke: bool = False, seed: int = 0):
+    run_id = _run_id()
+    cells, rows = {}, []
+    for plan_name, spec in PLANS.items():
+        for strat in STRATS:
+            m1, blob1 = run_cell(spec, strat, seed)
+            m2, blob2 = run_cell(spec, strat, seed)
+            assert blob1 == blob2, \
+                f"nondeterministic timeline for {plan_name}|{strat}"
+            key = f"{plan_name}|{strat}"
+            cells[key] = m1
+            rows.append({"name": key, "plan": plan_name, "strategy": strat,
+                         **m1})
+            print(f"# chaos {key:28s}: {m1}")
+
+    integrity = corruption_check(seed)
+    print(f"# chaos corruption_check: {integrity}")
+
+    bench = {"bench": "chaos", "run_id": run_id, "smoke": smoke,
+             "quantum_s": QUANTUM, "watchdog_s": WATCHDOG_S,
+             "cells": cells, "integrity": integrity}
+    with open("BENCH_chaos.json", "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("# wrote BENCH_chaos.json")
+    _append_summary_jsonl(rows, "chaos_summary", run_id)
+
+    # fatal gates (--smoke): the robustness story itself
+    if smoke:
+        bf_a = cells["build_fail|switch_a"]
+        assert bf_a["outage_drops"] == 0 and bf_a["served"] > 0, \
+            f"switch_a must keep serving under build_fail: {bf_a}"
+        bf_pr = cells["build_fail|pause_resume"]
+        assert bf_pr["outage_drops"] > 0 and bf_pr["aborted"] >= 1 \
+            and bf_pr["full_outage_windows"] >= 1, \
+            f"pause_resume must go dark under build_fail: {bf_pr}"
+        for strat in STRATS:
+            c = cells[f"build_stall|{strat}"]
+            assert c["t_end"] >= DURATION, \
+                f"build_stall wedged {strat}: {c}"
+            assert c["aborted"] >= 1, \
+                f"no watchdog abort recorded for {strat}: {c}"
+            assert c["final_split"] == ROLLBACK_SPLIT[strat], \
+                f"rollback split wrong for {strat}: {c}"
+            d = cells[f"link_outage|{strat}"]
+            assert d["closed_degraded_windows"] >= 1 and d["mttr_s"] > 0, \
+                f"{strat} never entered+exited degraded mode: {d}"
+            assert d["link_down_drops"] == 0, \
+                f"{strat} dropped requests to a dead link while the " \
+                f"breaker should have degraded: {d}"
+        print("# chaos-smoke OK: switch_a serves under build_fail, "
+              "watchdog aborts+rolls back stalls, degraded mode recovers, "
+              "corrupted hand-offs heal bit-exactly")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fatal robustness assertions (ci.sh tier-2)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

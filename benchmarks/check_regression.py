@@ -4,9 +4,10 @@ baselines.
 ``ci.sh`` refreshes ``BENCH_switch.json`` (``switch_micro --smoke``) and
 ``BENCH_handoff.json`` (``handoff.py --smoke``) on every tier-2 run, but
 until now nothing *compared* them to anything — the perf trajectory
-could silently regress under a green test suite.  By default BOTH pairs
-are checked (``BENCH_switch.json`` vs ``BENCH_baseline.json``,
-``BENCH_handoff.json`` vs ``BENCH_handoff_baseline.json``); passing
+could silently regress under a green test suite.  By default every pair
+is checked (``BENCH_switch.json`` vs ``BENCH_baseline.json``,
+``BENCH_handoff.json`` vs ``BENCH_handoff_baseline.json``,
+``BENCH_chaos.json`` vs ``BENCH_chaos_baseline.json``); passing
 ``--fresh``/``--baseline`` explicitly narrows the run to that single
 pair.  The check walks every numeric leaf a fresh/baseline pair share
 and flags:
@@ -52,6 +53,7 @@ _SKIP = ("timestamp", "smoke", "bench", "cores", "run_id")
 DEFAULT_PAIRS = (
     ("BENCH_switch.json", "BENCH_baseline.json"),
     ("BENCH_handoff.json", "BENCH_handoff_baseline.json"),
+    ("BENCH_chaos.json", "BENCH_chaos_baseline.json"),
 )
 
 

@@ -14,13 +14,19 @@
 #       benchmark (fatal: the stateful ssm downtime ordering
 #       pause_resume >> switch_b2 >> switch_a, the transfer/recompute
 #       crossover direction, and >=90% plan/measured best-arm agreement;
-#       refreshes BENCH_handoff.json), the serve_pipeline example in
-#       --smoke mode (examples stay executable, not rotting), the
-#       switch-path microbenchmark (refreshes BENCH_switch.json;
-#       non-fatal: perf noise must not mask a green suite) and the
-#       perf-regression check against the committed baselines
-#       (BENCH_baseline.json + BENCH_handoff_baseline.json; warns by
-#       default, BENCH_STRICT=1 turns regressions fatal).
+#       refreshes BENCH_handoff.json), the chaos grid in --smoke mode
+#       (fatal: deterministic fault injection — switch_a keeps serving
+#       under build_fail(p=1) while pause_resume goes dark, stalled
+#       switches are watchdog-aborted + rolled back, link outages enter
+#       and exit edge-only degraded mode, corrupted hand-offs heal
+#       bit-exactly; refreshes BENCH_chaos.json), the serve_pipeline
+#       example in --smoke mode (examples stay executable, not
+#       rotting), the switch-path microbenchmark (refreshes
+#       BENCH_switch.json; non-fatal: perf noise must not mask a green
+#       suite) and the perf-regression check against the committed
+#       baselines (BENCH_baseline.json + BENCH_handoff_baseline.json +
+#       BENCH_chaos_baseline.json; warns by default, BENCH_STRICT=1
+#       turns regressions fatal).
 #
 # Back-compat: SKIP_BENCH=1 forces tier-1 regardless of flags.
 set -euo pipefail
@@ -58,6 +64,10 @@ if [[ "$TIER" == "2" ]]; then
     # compare baseline against baseline
     rm -f BENCH_handoff.json
     run_py benchmarks/handoff.py --smoke
+    # chaos grid (fatal): the robustness story — fault injection is
+    # deterministic, hardened switching survives it
+    rm -f BENCH_chaos.json
+    run_py -m benchmarks.chaos --smoke
     run_py examples/serve_pipeline.py --smoke
     # same staleness rule for the (non-fatal) switch microbenchmark
     rm -f BENCH_switch.json

@@ -29,11 +29,15 @@ import sys
 import threading
 from typing import Optional, Tuple
 
+RANK_BREAKER = 8        # CircuitBreaker._lock (never held across other locks)
 RANK_POOL = 10          # PipelinePool._lock / StatefulPipelinePool._lock
 RANK_EXECUTOR = 20      # BuildExecutor._lock (+ its _idle condition)
 RANK_HANDLE = 30        # BuildHandle._cb_lock
 RANK_STAGE_CACHE = 40   # _CompiledStageCache._cache_lock
 RANK_STATEFUL_RUNNER = 42   # StatefulStageRunner._lock
+RANK_FAULT_INJECTOR = 45    # FaultPlan._lock (taken under the pool lock
+                            # by the hand-off mutation hook; leaf-like:
+                            # nothing is acquired while it is held)
 RANK_SESSION = 50       # DecodeSession._lock (innermost)
 
 

@@ -56,7 +56,7 @@ class RepartitionEvent:
     old_split: int
     new_split: int
     report: Optional[SwitchReport]
-    trigger: str = "network"        # "network" | "slo_p99"
+    trigger: str = "network"        # "network" | "slo_p99" | "circuit_breaker"
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +245,19 @@ class NeukonfigController:
         give SLO-aware policies their p99 look at the live timeline."""
         net = self.monitor.sample(t)
         self.strategy.observe(self.mgr.pool, net=net, profile=self.profile)
-        if self._engine is None or not hasattr(self.policy, "slo_check"):
+        if self._engine is None:
+            return None
+        if self._engine.note_network(t, net):
+            # breaker transition: the engine already repartitioned
+            # (entered or left edge-only degraded mode)
+            cur = self.mgr.active.split
+            ev = RepartitionEvent(t, net.bandwidth_mbps, cur, cur, None,
+                                  trigger="circuit_breaker")
+            self.events.append(ev)
+            return ev
+        if self._engine.in_degraded:
+            return None             # split pinned edge-only until recovery
+        if not hasattr(self.policy, "slo_check"):
             return None
         current = self.mgr.active.split
         target = self.policy.slo_check(t, self._engine.timeline,
@@ -270,6 +282,19 @@ class NeukonfigController:
             return None
         self.mgr.set_network(net)
         self.strategy.observe(self.mgr.pool, net=net, profile=self.profile)
+        if self._engine is not None:
+            if self._engine.note_network(t, net):
+                # breaker transition handled by the engine (enter/exit
+                # edge-only degraded mode); record it and stand down
+                cur = self.mgr.active.split
+                ev = RepartitionEvent(t, net.bandwidth_mbps, cur, cur, None,
+                                      trigger="circuit_breaker")
+                self.events.append(ev)
+                return ev
+            if self._engine.in_degraded:
+                # link still dead: Eq.-1 optimisation over an infinite
+                # transfer time is meaningless; split stays edge-only
+                return None
         current = self.mgr.active.split
         best = optimal_split(self.profile, net)
         do = self.policy.should_switch(t, current_split=current, best=best,

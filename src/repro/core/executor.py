@@ -14,7 +14,13 @@ Design points:
   handle and surfaced by ``drain()``/``wait()`` on the *calling* thread as
   a ``BackgroundBuildFailed`` warning — deterministic, testable, and the
   service keeps running on the old pipeline (the paper's availability
-  story must survive a broken rebuild).
+  story must survive a broken rebuild).  A failed *completion callback*
+  is a different animal — the build succeeded — and warns under the
+  distinct ``BuildCallbackFailed`` category.
+* Transient build failures (OOM races, flaky remote weight stores,
+  injected chaos) are retried on the worker when a ``RetryPolicy`` is
+  attached: capped exponential backoff with seeded jitter and an
+  optional overall deadline, attempt count surfaced on the handle.
 * ``drain()`` blocks until every submitted job has finished, which is how
   tier-1 tests stay single-threaded-reproducible: do async work, drain,
   then assert.
@@ -26,7 +32,10 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 import warnings
+import zlib
+from dataclasses import dataclass
 from typing import Any, Callable, List, Optional
 
 from repro.core import timing
@@ -38,15 +47,69 @@ class BackgroundBuildFailed(UserWarning):
     """A background pipeline build raised; service continuity is unaffected."""
 
 
+class BuildCallbackFailed(UserWarning):
+    """A completion *callback* raised.  The build itself succeeded — do
+    not confuse this with ``BackgroundBuildFailed`` (chaos tests key off
+    the distinction)."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff for transient build failures.
+
+    ``delay(attempt)`` is the sleep after failed attempt ``attempt``
+    (1-based): ``base_s * factor**(attempt-1)``, scaled by a seeded
+    jitter factor in ``[1, 1 + jitter)``, capped at ``cap_s``.  The
+    jitter draw is keyed on ``(seed, attempt)`` — pure function, no
+    shared RNG stream — so identical seeds give byte-identical
+    schedules regardless of thread interleaving.  ``factor >= 1 +
+    jitter`` is enforced so the pre-cap schedule is monotone
+    nondecreasing (worst case: max jitter this attempt, zero next).
+
+    ``deadline_s`` bounds the whole retry span relative to submission:
+    a retry whose backoff would land past ``t_submit + deadline_s`` is
+    abandoned and the last error surfaces.
+    """
+    max_attempts: int = 3
+    base_s: float = 0.05
+    factor: float = 2.0
+    cap_s: float = 1.0
+    jitter: float = 0.1
+    deadline_s: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_s < 0 or self.cap_s < 0 or self.jitter < 0:
+            raise ValueError("base_s, cap_s and jitter must be >= 0")
+        if self.factor < 1.0 + self.jitter:
+            raise ValueError("factor must be >= 1 + jitter for a monotone "
+                             "backoff schedule")
+
+    def delay(self, attempt: int) -> float:
+        u = (zlib.crc32(f"{self.seed}:{attempt}".encode()) % 10**6) / 10**6
+        raw = self.base_s * self.factor ** (attempt - 1) * (1.0 + self.jitter * u)
+        return min(self.cap_s, raw)
+
+    def schedule(self, n: Optional[int] = None) -> List[float]:
+        """The first ``n`` backoff delays (default: all this policy allows)."""
+        n = self.max_attempts - 1 if n is None else n
+        return [self.delay(a) for a in range(1, n + 1)]
+
+
 @guarded_by("_cb_lock", "_callbacks", "_completed", rank=RANK_HANDLE)
 class BuildHandle:
     """Future-like handle for one submitted build job."""
 
-    def __init__(self, fn: Callable[[], Any], key: Any = None):
+    def __init__(self, fn: Callable[[], Any], key: Any = None,
+                 retry: Optional[RetryPolicy] = None):
         self.fn = fn
         self.key = key
+        self.retry = retry
         self.result: Any = None
         self.error: Optional[BaseException] = None
+        self.attempts = 0           # build attempts actually executed
         self.t_submit = timing.now()
         self.t_wall = 0.0           # execution wall time (on the worker)
         self._event = threading.Event()
@@ -84,10 +147,25 @@ class BuildHandle:
     # -- worker side -----------------------------------------------------
     def _run(self) -> None:
         sw = timing.Stopwatch()
-        try:
-            self.result = self.fn()
-        except BaseException as e:          # surfaced later, never fatal
-            self.error = e
+        policy = self.retry
+        max_attempts = policy.max_attempts if policy is not None else 1
+        deadline = None
+        if policy is not None and policy.deadline_s is not None:
+            deadline = self.t_submit + policy.deadline_s
+        while True:
+            self.attempts += 1
+            try:
+                self.result = self.fn()
+                self.error = None           # a retry redeemed earlier failures
+                break
+            except BaseException as e:      # surfaced later, never fatal
+                self.error = e
+            if self.attempts >= max_attempts:
+                break
+            backoff = policy.delay(self.attempts)
+            if deadline is not None and timing.now() + backoff > deadline:
+                break                       # would retry past the deadline
+            time.sleep(backoff)
         self.t_wall = sw.elapsed()
         with self._cb_lock:
             self._completed = True
@@ -97,7 +175,7 @@ class BuildHandle:
                 cb(self)
             except Exception as e:
                 warnings.warn(f"build completion callback raised: {e!r}",
-                              BackgroundBuildFailed)
+                              BuildCallbackFailed)
         # the event fires only after every registered callback ran, so
         # wait()/drain() observing completion also observe the callbacks'
         # effects (failure records, report fields, registry cleanup)
@@ -115,9 +193,11 @@ class BuildExecutor:
     stages in parallel.
     """
 
-    def __init__(self, name: str = "neukonfig-build", inline: bool = False):
+    def __init__(self, name: str = "neukonfig-build", inline: bool = False,
+                 retry: Optional[RetryPolicy] = None):
         self.name = name
         self.inline = inline
+        self.retry = retry          # default policy stamped on every handle
         self._q: "queue.SimpleQueue[Optional[BuildHandle]]" = queue.SimpleQueue()
         self._thread: Optional[threading.Thread] = None
         self._lock = make_lock("executor", RANK_EXECUTOR)
@@ -126,8 +206,10 @@ class BuildExecutor:
         self._shutdown = False
 
     # -- submission -------------------------------------------------------
-    def submit(self, fn: Callable[[], Any], *, key: Any = None) -> BuildHandle:
-        handle = BuildHandle(fn, key=key)
+    def submit(self, fn: Callable[[], Any], *, key: Any = None,
+               retry: Optional[RetryPolicy] = None) -> BuildHandle:
+        handle = BuildHandle(fn, key=key,
+                             retry=self.retry if retry is None else retry)
         if self.inline:
             handle._run()
             return handle

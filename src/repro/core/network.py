@@ -13,8 +13,11 @@ In the multi-pod TPU mapping the same classes describe the inter-pod link
 from __future__ import annotations
 
 import bisect
+import math
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.concurrency import RANK_BREAKER, guarded_by, make_lock
 
 
 @dataclass
@@ -23,7 +26,13 @@ class NetworkModel:
     latency_ms: float = 20.0
 
     def transfer_time(self, nbytes: int) -> float:
-        """Seconds to move nbytes edge->cloud (latency + serialisation)."""
+        """Seconds to move nbytes edge->cloud (latency + serialisation).
+
+        A dead link (``bandwidth <= 0``) prices as ``math.inf`` — a
+        representable outage the serving path can branch on, not a
+        ZeroDivisionError."""
+        if self.bandwidth_mbps <= 0.0:
+            return math.inf
         return self.latency_ms / 1e3 + nbytes * 8 / (self.bandwidth_mbps * 1e6)
 
 
@@ -81,4 +90,53 @@ class NetworkMonitor:
             self._last_bw = net.bandwidth_mbps
             self._last_change_t = t
             return net
+        return None
+
+
+@guarded_by("_lock", "_open", "_bad", "_good", "opened_at", rank=RANK_BREAKER)
+class CircuitBreaker:
+    """Consecutive-sample circuit breaker on the cloud link.
+
+    ``record(t, bw)`` feeds each observed bandwidth sample; after
+    ``open_after`` consecutive samples at/below ``outage_bw_mbps`` the
+    breaker *opens* (sustained outage — the engine should enter
+    edge-only degraded mode), and after ``close_after`` consecutive
+    healthy samples it *closes* again.  Edge-triggered: ``record``
+    returns ``"open"``/``"close"`` exactly once per transition, else
+    ``None``.  Thread-safe; the lock is a leaf (``RANK_BREAKER``) never
+    held across any other acquisition.
+    """
+
+    def __init__(self, outage_bw_mbps: float = 0.5, open_after: int = 1,
+                 close_after: int = 1):
+        self.outage_bw_mbps = float(outage_bw_mbps)
+        self.open_after = max(1, int(open_after))
+        self.close_after = max(1, int(close_after))
+        self._lock = make_lock("circuit-breaker", RANK_BREAKER)
+        self._open = False
+        self._bad = 0               # consecutive outage samples
+        self._good = 0              # consecutive healthy samples
+        self.opened_at: Optional[float] = None
+
+    @property
+    def is_open(self) -> bool:
+        with self._lock:
+            return self._open
+
+    def record(self, t: float, bandwidth_mbps: float) -> Optional[str]:
+        with self._lock:
+            if bandwidth_mbps <= self.outage_bw_mbps:
+                self._bad += 1
+                self._good = 0
+                if not self._open and self._bad >= self.open_after:
+                    self._open = True
+                    self.opened_at = t
+                    return "open"
+            else:
+                self._good += 1
+                self._bad = 0
+                if self._open and self._good >= self.close_after:
+                    self._open = False
+                    self.opened_at = None
+                    return "close"
         return None

@@ -40,9 +40,10 @@ from __future__ import annotations
 
 import os
 import tempfile
+import threading
 import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
 from repro.core import timing
 from repro.core.concurrency import RANK_POOL, guarded_by, make_lock
@@ -53,6 +54,15 @@ from repro.core.pipeline import BuildReport, EdgeCloudPipeline
 from repro.core.stages import StageRunner
 
 PoolKey = Tuple[int, bool]            # (split, owns_weights)
+
+
+class SwitchAborted(RuntimeError):
+    """Raised inside a fenced switch thread: the watchdog abandoned this
+    switch, so its pool mutations (activate/pause) must not land."""
+
+
+class SwitchAbortedWarning(UserWarning):
+    """A switch was timed out by the watchdog and rolled back."""
 
 
 @dataclass
@@ -82,6 +92,7 @@ class PoolEntry:
 
 @guarded_by("_lock", "_entries", "_pending", "_build_failures",
             "_standby_handle", "_executor", "_clock",
+            "_aborted_switch_threads", "_pause_epoch",
             "active_key", "standby_key", rank=RANK_POOL)
 class PipelinePool:
     """Owns N built pipelines plus the checkpoint Pause-and-Resume reloads."""
@@ -92,8 +103,13 @@ class PipelinePool:
                  standby_owns_weights: bool = True,
                  warm_standbys: bool = False,
                  max_entries: int = 16,
-                 executor: Optional[BuildExecutor] = None):
+                 executor: Optional[BuildExecutor] = None,
+                 fault_plan=None):
         self.runner = runner
+        # chaos valve (repro.core.faults.FaultPlan or None): consulted
+        # before every pipeline build; unguarded — armed/swap is a
+        # benign publish, injectors do their own locking
+        self.fault_plan = fault_plan
         self.net = net
         self.sample_inputs = sample_inputs
         self.mem_budget_bytes = mem_budget_bytes
@@ -115,6 +131,8 @@ class PipelinePool:
         self._pending: Dict[PoolKey, BuildHandle] = {}
         self._standby_handle: Optional[BuildHandle] = None
         self._build_failures: List[Tuple[PoolKey, BaseException]] = []
+        self._aborted_switch_threads: Set[threading.Thread] = set()
+        self._pause_epoch = 0       # bumped by every pause(): "went dark"
 
     @property
     def checkpoint_path(self) -> str:
@@ -243,6 +261,11 @@ class PipelinePool:
                 if cached is not None and cached.pipeline.ready:
                     self._touch(cached)
                     return cached, True
+        plan = self.fault_plan
+        if plan is not None:
+            # chaos valve: may raise InjectedBuildFailure or stall.
+            # Outside the pool lock, like the build it gates.
+            plan.on_build(key)
         pipe = self._new_pipeline(split, owns_weights)
         report = pipe.build(self.sample_inputs, cold=cold,
                             reload_from=reload_from)
@@ -441,6 +464,7 @@ class PipelinePool:
         admits against the old pipeline (and drains on it) or against the
         new one — never a torn state."""
         with self._lock:
+            self._check_fence()
             entry = self._entries[key]
             assert entry.pipeline.ready, f"pipeline {key} not built"
             sw = timing.Stopwatch()
@@ -464,8 +488,49 @@ class PipelinePool:
     def pause(self) -> Optional[PoolKey]:
         """Stop serving (Pause-and-Resume step ii); returns the old key."""
         with self._lock:
+            self._check_fence()
             old, self.active_key = self.active_key, None
+            self._pause_epoch += 1
         return old
+
+    # -- watchdog fencing ---------------------------------------------------
+    # The serving engine's switch watchdog runs a strategy's switch() on a
+    # sacrificial thread.  On timeout it *fences* that thread: any further
+    # pool mutation (activate/pause) from it raises SwitchAborted, so a
+    # zombie switch that eventually unblocks cannot yank the pointer out
+    # from under the rolled-back engine.  Fencing takes the pool lock,
+    # which linearizes it against an in-flight activate: either the swap
+    # completed first (watchdog sees it in the grace re-check) or the
+    # fence lands first and the swap raises.
+
+    @property
+    def pause_epoch(self) -> int:
+        """How many times serving was paused — the engine's ''did the
+        aborted switch go dark before we fenced it'' signal."""
+        with self._lock:
+            return self._pause_epoch
+
+    def fence_thread(self, thread: Optional[threading.Thread] = None) -> None:
+        """Fence by Thread *object*, not ident: idents are recycled after
+        a thread dies, and a recycled ident must not inherit a fence."""
+        if thread is None:
+            thread = threading.current_thread()
+        with self._lock:
+            # drop fences whose zombie already exited (bounded growth)
+            self._aborted_switch_threads = {
+                t for t in self._aborted_switch_threads if t.is_alive()}
+            self._aborted_switch_threads.add(thread)
+
+    def unfence_thread(self, thread: Optional[threading.Thread] = None) -> None:
+        if thread is None:
+            thread = threading.current_thread()
+        with self._lock:
+            self._aborted_switch_threads.discard(thread)
+
+    def _check_fence(self) -> None:    # holds: _lock
+        if threading.current_thread() in self._aborted_switch_threads:
+            raise SwitchAborted("this switch was abandoned by the watchdog; "
+                                "its pool mutations are fenced off")
 
     def release(self, key: PoolKey) -> None:
         with self._lock:

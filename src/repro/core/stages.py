@@ -138,6 +138,16 @@ class StageRunner(_CompiledStageCache):
     def num_units(self) -> int:
         return self.cfg.num_layers + 2
 
+    def edge_param_bytes(self, split: int) -> int:
+        """Approximate parameter bytes the edge holds at ``split`` (layers
+        ``[0, split)`` plus the embedding): the layer-proportional share
+        of the full model.  The degraded-mode picker uses this to find
+        the deepest edge-only split that fits ``mem_budget_bytes``."""
+        total = sum(int(a.size) * a.dtype.itemsize
+                    for a in jax.tree.leaves(self.params))
+        frac = (split + 1) / (self.cfg.num_layers + 2)
+        return int(total * frac)
+
     # -- execution ----------------------------------------------------
     def _apply_unit(self, state: Dict[str, Any], i: int) -> Dict[str, Any]:
         cfg, params = self.cfg, self.params

@@ -59,6 +59,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -82,6 +84,36 @@ from repro.models import transformer as T
 
 _ATTN_FAMILIES = ("dense", "moe", "vlm")
 _SUPPORTED = _ATTN_FAMILIES + ("ssm", "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# hand-off integrity envelope
+# ---------------------------------------------------------------------------
+
+# Envelope entry every export_layers payload carries: (epoch, pos, crc).
+# A string key among the tuple tensor keys — safe because `key[0]` of
+# "__meta__" is "_", never mistaken for a KV ("k"/"v"/"a") entry.
+HANDOFF_META_KEY = "__meta__"
+
+
+class HandoffCorrupted(RuntimeError):
+    """An imported hand-off payload failed checksum/epoch validation."""
+
+
+class HandoffIntegrityWarning(UserWarning):
+    """A corrupt hand-off payload was detected and recovered from by
+    falling back to masked recompute — the stream served no bad state."""
+
+
+def payload_checksum(payload: Dict[Any, tuple]) -> int:
+    """CRC32 chained over every tensor entry (meta excluded), in sorted
+    key order so the digest is independent of dict insertion order."""
+    crc = 0
+    for k in sorted((k for k in payload if k != HANDOFF_META_KEY), key=repr):
+        dtype, shape, buf = payload[k]
+        crc = zlib.crc32(repr((k, dtype, tuple(shape))).encode(), crc)
+        crc = zlib.crc32(buf, crc)
+    return crc
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +192,15 @@ class StatefulStageRunner:
     def num_units(self) -> int:
         """Split domain for the pool/partitioner: one unit per LAYER."""
         return self.cfg.num_layers
+
+    def edge_param_bytes(self, split: int) -> int:
+        """Layer-proportional edge parameter bytes at ``split`` (same
+        contract as ``StageRunner.edge_param_bytes``; the degraded-mode
+        split picker calls this)."""
+        total = sum(int(a.size) * a.dtype.itemsize
+                    for a in jax.tree.leaves(self.params))
+        frac = (split + 1) / (self.cfg.num_layers + 2)
+        return int(total * frac)
 
     # -- one decoder unit, one token ------------------------------------
     def _decode_unit(self, params, unit, x, cache, new, pos):
@@ -568,7 +609,12 @@ class DecodeSession:
     def export_layers(self, lo: int, hi: int
                       ) -> Tuple[Dict[str, tuple], int]:
         """Really serialize the state of layers [lo, hi): KV sliced to the
-        live context, recurrent state whole.  Returns (payload, nbytes)."""
+        live context, recurrent state whole.  Returns (payload, nbytes).
+
+        The payload carries a ``HANDOFF_META_KEY`` integrity envelope —
+        ``(epoch, pos, crc32)`` — that ``import_layers`` validates before
+        committing anything, so in-transit corruption is detected rather
+        than served."""
         u0 = unit_index_of_split(self.cfg, lo)
         u1 = unit_index_of_split(self.cfg, hi)
         payload: Dict[str, tuple] = {}
@@ -582,7 +628,27 @@ class DecodeSession:
                     buf = arr.tobytes()
                     payload[k] = (str(arr.dtype), arr.shape, buf)
                     nbytes += len(buf)
+            payload[HANDOFF_META_KEY] = (self.epoch, self.pos,
+                                         payload_checksum(payload))
         return payload, nbytes
+
+    def validate_payload(self, payload: Dict[str, tuple]) -> None:
+        """Raise ``HandoffCorrupted`` unless the payload's envelope
+        matches its bytes and the session's current epoch.  A payload
+        without an envelope passes (pre-envelope callers)."""
+        meta = payload.get(HANDOFF_META_KEY)
+        if meta is None:
+            return
+        epoch, _pos, crc = meta
+        with self._lock:
+            live_epoch = self.epoch
+        if epoch != live_epoch:
+            raise HandoffCorrupted(f"hand-off epoch {epoch} != session "
+                                   f"epoch {live_epoch}: stale payload")
+        actual = payload_checksum(payload)
+        if crc != actual:
+            raise HandoffCorrupted(f"hand-off checksum mismatch: envelope "
+                                   f"{crc:#010x} != bytes {actual:#010x}")
 
     def import_layers(self, payload: Dict[str, tuple]) -> None:
         """Deserialize an ``export_layers`` payload back into the state.
@@ -590,12 +656,26 @@ class DecodeSession:
         KV rows at positions >= ``pos`` are zero by invariant (zero-init
         caches, masked recompute), so a sliced KV payload reassembles
         into a fresh zero buffer with ONE host->device transfer instead
-        of an in-place scatter against the old cache."""
-        with self._lock:
+        of an in-place scatter against the old cache.
+
+        Validates the integrity envelope and fully decodes every entry
+        BEFORE committing anything: on corruption this raises
+        ``HandoffCorrupted`` with the session state untouched, so a
+        caller's recompute fallback starts from pristine state."""
+        self.validate_payload(payload)
+        decoded: Dict[str, np.ndarray] = {}
+        try:
             for k, (dtype, shape, buf) in payload.items():
-                arr = np.frombuffer(buf, dtype=dtype).reshape(shape)
+                if k == HANDOFF_META_KEY:
+                    continue
+                decoded[k] = np.frombuffer(buf, dtype=dtype).reshape(shape)
+        except (ValueError, TypeError) as e:   # short buffer / bad dtype
+            raise HandoffCorrupted(f"undecodable hand-off entry "
+                                   f"{k!r}: {e}") from None
+        with self._lock:
+            for k, arr in decoded.items():
                 if k[0] in ("k", "v", "a"):
-                    full = np.zeros(self.cache[k].shape, dtype)
+                    full = np.zeros(self.cache[k].shape, arr.dtype)
                     full[:, :, :arr.shape[2]] = arr
                     self.cache[k] = jnp.asarray(full)
                 else:
@@ -794,6 +874,8 @@ class HandoffReport:
                               # the stream by the engine)
     plan: Optional[HandoffPlan]
     epoch: int                # session epoch the hand-off synced to
+    fallback: bool = False    # transfer payload failed validation and the
+                              # hand-off recovered via masked recompute
 
     @property
     def total(self) -> float:
@@ -839,17 +921,31 @@ class StatefulPipelinePool(PipelinePool):
                             target=s.calib_spec, act_bytes=4)
         mode = self.force_mode or plan.best
         lo, hi = min(old_split, new_split), max(old_split, new_split)
+        fallback = False
         sw = Stopwatch()
         if mode == "transfer":
             payload, nbytes = s.export_layers(lo, hi)
-            s.import_layers(payload)
+            fplan = self.fault_plan
+            if fplan is not None:
+                # chaos valve: in-transit corruption/truncation
+                fplan.mutate_handoff(payload, epoch=s.epoch)
+            # the (possibly corrupt) payload really crossed the link, so
+            # its priced seconds stand even when validation rejects it
             t_network = self.net.transfer_time(nbytes)
+            try:
+                s.import_layers(payload)
+            except HandoffCorrupted as e:
+                warnings.warn(f"hand-off payload failed validation ({e}); "
+                              f"recovering via masked recompute",
+                              HandoffIntegrityWarning)
+                s.recompute_layers(lo, hi)
+                mode, fallback = "recompute", True
         else:
             s.recompute_layers(lo, hi)
             nbytes, t_network = 0, 0.0
         t_wall = sw.elapsed()
         return HandoffReport(mode, hi - lo, nbytes, t_wall, t_network,
-                             plan, s.epoch)
+                             plan, s.epoch, fallback=fallback)
 
     def take_last_handoff(self) -> Optional[HandoffReport]:
         """Pop the hand-off the most recent activation executed (the

@@ -87,6 +87,8 @@ class SwitchReport:
     t_handoff: float = 0.0        # measured wall + priced link seconds
     handoff_bytes: int = 0        # really-serialized bytes (transfer arm)
     handoff_mode: str = ""        # 'transfer' | 'recompute' | 'none'
+    aborted: bool = False         # watchdog timed the switch out and the
+                                  # engine rolled back to the old pipeline
 
 
 class StandbySplitMismatch(UserWarning):

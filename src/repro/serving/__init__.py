@@ -5,8 +5,9 @@ KV-cache batching server used by the serve example (``server``)."""
 from repro.serving.clock import Clock, VirtualClock, WallClock, quantize
 from repro.serving.engine import ServingEngine, StageWorker, request_stream
 from repro.serving.server import BatchingServer, Request, state_nbytes
-from repro.serving.timeline import (RequestRecord, ServiceTimeline,
-                                    SwitchWindow)
+from repro.serving.sim import SimPipeline, SimPool, SimRunner
+from repro.serving.timeline import (DegradedWindow, RequestRecord,
+                                    ServiceTimeline, SwitchWindow)
 from repro.serving.workload import (ARRIVALS, ArrivalProcess, BurstyArrivals,
                                     ClientStream, DiurnalArrivals,
                                     PoissonArrivals, UniformArrivals,

@@ -15,6 +15,7 @@ serves two modes:
 """
 from __future__ import annotations
 
+import math
 import time
 
 from repro.core import timing
@@ -86,10 +87,20 @@ class WallClock(Clock):
 
 class VirtualClock(Clock):
     """Deterministic stream time: advances only via the engine's events
-    and explicit ``charge``s of measured work."""
+    and explicit ``charge``s of measured work.
 
-    def __init__(self, start: float = 0.0):
+    ``quantum`` (optional) rounds every positive ``charge`` UP to a
+    multiple of that many seconds.  Chaos/benchmark runs use this to
+    absorb scheduler jitter: a measured wall of 0.37 s and one of 0.41 s
+    both charge 0.5 s at ``quantum=0.25``, so two seeded runs whose real
+    walls differ sub-quantum produce byte-identical timelines.
+    """
+
+    def __init__(self, start: float = 0.0, quantum: "float | None" = None):
         self._t = float(start)
+        if quantum is not None and quantum <= 0:
+            raise ValueError(f"quantum must be positive ({quantum=})")
+        self.quantum = quantum
 
     def now(self) -> float:
         return self._t
@@ -104,4 +115,9 @@ class VirtualClock(Clock):
         self._t += float(dt)
 
     def charge(self, dt: float) -> None:
-        self.advance(max(0.0, dt))
+        dt = max(0.0, dt)
+        if self.quantum is not None and dt > 0:
+            # ceil with an epsilon so an exact multiple (e.g. a scripted
+            # cost of 2 quanta) doesn't round up to 3 on fp error
+            dt = max(1, math.ceil(dt / self.quantum - 1e-9)) * self.quantum
+        self.advance(dt)

@@ -63,12 +63,17 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
+import threading
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
+from repro.core.executor import BuildHandle
 from repro.core.network import NetworkModel
-from repro.core.strategies import apply_handoff
+from repro.core.pool import SwitchAbortedWarning
+from repro.core.strategies import SwitchReport, apply_handoff
 from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.timeline import (RequestRecord, ServiceTimeline,
                                     SwitchWindow)
@@ -123,9 +128,27 @@ class ServingEngine:
                  controller=None, timeline: Optional[ServiceTimeline] = None,
                  queue_depth: int = 0, overlap: bool = False,
                  observe_dt: Optional[float] = None, warmup: bool = True,
-                 fairness: str = "round_robin"):
+                 fairness: str = "round_robin",
+                 switch_timeout_s: Optional[float] = None,
+                 breaker=None, fault_plan=None,
+                 degraded_strategy="switch_b2"):
         self.mgr = mgr
         self.pool = mgr.pool
+        # -- robustness knobs (all default off: tier-1 behaviour unchanged)
+        # watchdog: a switch() that hasn't returned after this many wall
+        # seconds is fenced off and rolled back instead of wedging the loop
+        self.switch_timeout_s = switch_timeout_s
+        # cloud-link circuit breaker (repro.core.network.CircuitBreaker):
+        # opens on sustained outage -> edge-only degraded mode
+        self.breaker = breaker
+        # chaos valve (repro.core.faults.FaultPlan): per-request timing
+        # perturbations are the only hook the engine itself consults
+        self.fault_plan = fault_plan
+        # strategy spec used for the enter/exit degraded-mode repartitions
+        self.degraded_strategy = degraded_strategy
+        self._degraded = False
+        self._pre_degraded_split: Optional[int] = None
+        self._scheduled_net: List[Tuple[float, float, float]] = []
         self.clock = clock if clock is not None else VirtualClock()
         self.timeline = timeline if timeline is not None else ServiceTimeline()
         self.queue_depth = int(queue_depth)
@@ -180,14 +203,16 @@ class ServingEngine:
         if not self.overlap:
             # the gap since the previous switch was stream-seconds long;
             # background builds finished during it (not charged to the
-            # switch window)
-            self.pool.drain()
+            # switch window).  Under a watchdog the settle is bounded:
+            # a wedged background build must not block the next switch.
+            self.pool.drain(timeout=self.switch_timeout_s)
         t_sw = self.clock.now()
         old = self.pool.snapshot_active()
+        paused_before = getattr(self.pool, "pause_epoch", 0)
         self._prune_inflight(t_sw)          # whatever remains is in flight
         inflight = [rec for _, rec in self._inflight]
         with self.clock.measure():
-            report = strategy.switch(self.pool, new_split)
+            report = self._run_switch(strategy, new_split, old, paused_before)
         # stateful pipelines: the hand-off's measured wall is already in
         # the charge above (it ran on this thread inside switch()); the
         # priced link time for the serialized state never consumed wall,
@@ -210,12 +235,138 @@ class ServingEngine:
             new_split=report.new_split, drained=len(inflight),
             analytic_downtime=report.downtime,
             t_handoff=report.t_handoff,
-            handoff_mode=report.handoff_mode))
+            handoff_mode=report.handoff_mode,
+            aborted=report.aborted))
         self.reports.append(report)
         return report
 
+    def _run_switch(self, strategy, new_split: int, old,
+                    paused_before: int) -> SwitchReport:
+        """Run ``strategy.switch`` — directly, or under the watchdog.
+
+        With ``switch_timeout_s`` set the switch runs on a sacrificial
+        thread; on timeout that thread is *fenced* at the pool (any
+        further activate/pause from it raises ``SwitchAborted``) and an
+        ``aborted`` report is returned after rolling back, so a stalled
+        build wedges one thread, never the stream.  Fencing takes the
+        pool lock, so it linearizes against an in-flight pointer swap —
+        the post-fence grace re-check catches a switch that completed in
+        the gap and treats it as a success.
+        """
+        if self.switch_timeout_s is None:
+            return strategy.switch(self.pool, new_split)
+        handle = BuildHandle(lambda: strategy.switch(self.pool, new_split),
+                             key=("switch", new_split))
+        th = threading.Thread(target=handle._run, name="nk-switch",
+                              daemon=True)
+        th.start()
+        if not handle.wait(self.switch_timeout_s):
+            self.pool.fence_thread(th)
+            if not (handle.wait(0.05) and handle.error is None):
+                return self._aborted_report(
+                    strategy, new_split, old, paused_before,
+                    f"watchdog timeout after {self.switch_timeout_s}s")
+            self.pool.unfence_thread(th)    # completed in the fence gap
+        if handle.error is not None:
+            return self._aborted_report(
+                strategy, new_split, old, paused_before,
+                f"switch raised: {handle.error!r}")
+        return handle.result
+
+    def _aborted_report(self, strategy, new_split: int, old,
+                        paused_before: int, why: str) -> SwitchReport:
+        """Roll back an abandoned switch and synthesize its report.
+
+        ``full_outage`` is honest about what the stream saw: True when
+        the attempt paused serving before it was fenced (pause epoch
+        advanced — arrivals inside this window were dropped) or left no
+        active pipeline (then the old one is re-activated)."""
+        warnings.warn(f"switch to split {new_split} aborted ({why}); "
+                      f"service continues on the previous pipeline",
+                      SwitchAbortedWarning)
+        went_dark = getattr(self.pool, "pause_epoch", 0) > paused_before
+        full_outage = went_dark
+        if self.pool.snapshot_active() is None:
+            full_outage = True
+            if old is not None:
+                self.pool.try_activate(old.key)   # rollback
+        spec = getattr(strategy, "name", None) or str(strategy)
+        return SwitchReport(spec, old.split if old is not None else -1,
+                            new_split, downtime=0.0,
+                            full_outage=full_outage, aborted=True, note=why)
+
     def set_network(self, net: NetworkModel) -> None:
         self.mgr.set_network(net)
+        self.note_network(self.clock.now(), net)
+
+    def schedule_network(self, t: float, bandwidth_mbps: float,
+                         latency_ms: float = 20.0) -> None:
+        """Script a link change at stream time ``t`` — the controller-less
+        path for driving outages through the breaker (chaos benchmarks)."""
+        self._scheduled_net.append((t, bandwidth_mbps, latency_ms))
+
+    # -- degraded mode (cloud link dead -> edge-only) -----------------------
+    def note_network(self, t: float, net: NetworkModel) -> bool:
+        """Feed one observed link sample to the circuit breaker and act on
+        its transitions: ``open`` -> repartition to the deepest edge-only
+        split that fits the memory budget; ``close`` -> repartition back.
+        Returns True when a transition was handled this call (controllers
+        then skip their own repartition logic for this sample)."""
+        if self.breaker is None:
+            return False
+        edge = self.breaker.record(t, net.bandwidth_mbps)
+        if edge == "open" and not self._degraded:
+            self._enter_degraded(t)
+            return True
+        if edge == "close" and self._degraded:
+            self._exit_degraded(t)
+            return True
+        return False
+
+    @property
+    def in_degraded(self) -> bool:
+        return self._degraded
+
+    def _max_split(self) -> int:
+        runner = self.pool.runner
+        cfg = getattr(runner, "cfg", None)
+        if cfg is not None and getattr(cfg, "num_layers", 0):
+            return int(cfg.num_layers)
+        return int(runner.max_split)
+
+    def _pick_degraded_split(self) -> int:
+        """Deepest edge-only split: the full model when it fits the
+        pool's ``mem_budget_bytes``, else the largest-fitting prefix
+        (load shedding: serve what fits rather than nothing)."""
+        n = self._max_split()
+        budget = self.pool.mem_budget_bytes
+        bytes_fn = getattr(self.pool.runner, "edge_param_bytes", None)
+        if budget is None or bytes_fn is None:
+            return n
+        for s in range(n, 0, -1):
+            if bytes_fn(s) <= budget:
+                return s
+        return 1
+
+    def _enter_degraded(self, t: float) -> None:
+        active = self.pool.snapshot_active()
+        self._pre_degraded_split = active.split if active is not None else None
+        target = self._pick_degraded_split()
+        self._degraded = True
+        self.timeline.enter_degraded(t, split=target)
+        if active is None or active.split != target:
+            self.execute_switch(self.degraded_strategy, target)
+
+    def _exit_degraded(self, t: float) -> None:
+        self._degraded = False
+        back, self._pre_degraded_split = self._pre_degraded_split, None
+        active = self.pool.snapshot_active()
+        if back is not None and (active is None or active.split != back):
+            self.execute_switch(self.degraded_strategy, back)
+        # stamped AFTER the restore repartition: recovery isn't over
+        # until the pre-outage partitioning is serving again, so MTTR
+        # includes the restore switch
+        self.timeline.exit_degraded(self.clock.now())
 
     # -- traffic plane -------------------------------------------------------
     def _prune_inflight(self, t: float) -> None:
@@ -231,6 +382,24 @@ class ServingEngine:
             self.timeline.drop(rec, "outage")
             return None
         _, timing = entry.pipeline.process(inputs)
+        if self.fault_plan is not None:
+            timing = self.fault_plan.perturb_timing(rec.rid, timing)
+        if self._degraded:
+            # edge-only: the cloud is unreachable, so any residual cloud
+            # share executes on the edge hardware (scaled by how much
+            # slower it is) and nothing crosses the link
+            scale = getattr(entry.pipeline, "edge_scale", 1.0)
+            done = self.edge.occupy(start,
+                                    timing.t_edge + timing.t_cloud * scale)
+            self.timeline.serve(rec, t_start=start, t_done=done,
+                                split=entry.split, degraded=True)
+            self._inflight.append((done, rec))
+            return done
+        if not math.isfinite(timing.t_transfer):
+            # dead link without (or before) an open breaker: the request
+            # cannot reach the cloud stage
+            self.timeline.drop(rec, "link_down")
+            return None
         edge_end = self.edge.occupy(start, timing.t_edge)
         cloud_start = max(edge_end + timing.t_transfer, self.cloud.busy_until)
         done = self.cloud.occupy(cloud_start, timing.t_cloud)
@@ -396,6 +565,10 @@ class ServingEngine:
             heapq.heappush(heap, (t, _PRIO_CMD, next(seq), "cmd",
                                   (strat, split, bw)))
             duration = max(duration, t)
+        for t, bw, lat in self._scheduled_net:
+            heapq.heappush(heap, (t, _PRIO_NET, next(seq), "setnet",
+                                  (bw, lat)))
+            duration = max(duration, t)
         if self.controller is not None:
             for t in self.controller.network_events(duration):
                 heapq.heappush(heap, (t, _PRIO_NET, next(seq), "net", None))
@@ -427,6 +600,9 @@ class ServingEngine:
                 self._dispatch(t)
             elif kind == "net":
                 self.controller.on_network_event(t)
+            elif kind == "setnet":
+                bw, lat = payload
+                self.set_network(NetworkModel(bw, latency_ms=lat))
             elif kind == "observe":
                 self.controller.observe_tick(t)
             else:                       # scripted switch
@@ -434,7 +610,9 @@ class ServingEngine:
                 if bw is not None:
                     self.set_network(NetworkModel(bw))
                 self.execute_switch(strat, split)
-        self.pool.drain()               # settle trailing background builds
+        # settle trailing background builds; bounded under a watchdog so
+        # a wedged build can't hang the whole run
+        self.pool.drain(timeout=self.switch_timeout_s)
         self.timeline.finish(max(self.clock.now(), duration))
         return self.timeline
 

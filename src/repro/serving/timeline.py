@@ -32,6 +32,8 @@ class RequestRecord:
                                         # a repartition replaced it
     client: Optional[str] = None        # ClientStream id (None: the single
                                         # anonymous source)
+    degraded: bool = False              # served in edge-only degraded mode
+                                        # (cloud link down, breaker open)
 
     @property
     def served(self) -> bool:
@@ -62,10 +64,34 @@ class SwitchWindow:
     t_handoff: float = 0.0              # executed state hand-off seconds
                                         # inside this window (stateful)
     handoff_mode: str = ""              # 'transfer' | 'recompute' | ''
+    aborted: bool = False               # watchdog timed the switch out;
+                                        # the engine rolled back
 
     @property
     def duration(self) -> float:
         return self.t_end - self.t_start
+
+
+@dataclass
+class DegradedWindow:
+    """Stream interval served edge-only because the cloud link died.
+
+    Opened when the circuit breaker trips, closed after the engine has
+    repartitioned *back* on recovery — so ``duration`` is the
+    mean-time-to-recovery contribution including the restore switch.
+    """
+    t_start: float
+    split: int                          # edge-only split served during it
+    reason: str = "link_outage"
+    t_end: Optional[float] = None       # None: still open at end of run
+
+    @property
+    def closed(self) -> bool:
+        return self.t_end is not None
+
+    @property
+    def duration(self) -> Optional[float]:
+        return None if self.t_end is None else self.t_end - self.t_start
 
 
 class ServiceTimeline:
@@ -74,6 +100,7 @@ class ServiceTimeline:
     def __init__(self):
         self.records: List[RequestRecord] = []
         self.windows: List[SwitchWindow] = []
+        self.degraded: List[DegradedWindow] = []
         self.t_end: Optional[float] = None      # stamped by the engine at
                                                 # end of run
         # sorted side-indices so the rolling-window metrics the SLO policy
@@ -95,15 +122,31 @@ class ServiceTimeline:
         rec.drop_reason = reason
 
     def serve(self, rec: RequestRecord, *, t_start: float, t_done: float,
-              split: int) -> None:
+              split: int, degraded: bool = False) -> None:
         rec.t_start, rec.t_done, rec.split = t_start, t_done, split
+        rec.degraded = degraded
         bisect.insort(self._completions, (t_done, t_done - rec.t_arrival))
 
     def record_switch(self, window: SwitchWindow) -> None:
         self.windows.append(window)
 
+    def enter_degraded(self, t: float, *, split: int,
+                       reason: str = "link_outage") -> DegradedWindow:
+        w = DegradedWindow(t, split, reason)
+        self.degraded.append(w)
+        return w
+
+    def exit_degraded(self, t: float) -> None:
+        for w in reversed(self.degraded):
+            if w.t_end is None:
+                w.t_end = t
+                return
+
     def finish(self, t: float) -> None:
         self.t_end = t
+        for w in self.degraded:
+            if w.t_end is None:
+                w.t_end = t             # still dark at end of run
 
     # -- derived metrics ---------------------------------------------------
     @property
@@ -156,6 +199,19 @@ class ServiceTimeline:
                  reason: Optional[str] = None) -> List[RequestRecord]:
         return [r for r in self.arrivals_in(t0, t1) if r.dropped
                 and (reason is None or r.drop_reason == reason)]
+
+    def degraded_seconds(self) -> float:
+        """Total stream time spent in edge-only degraded mode (open
+        windows count up to ``t_end``/their own end)."""
+        return sum(w.duration for w in self.degraded if w.duration is not None)
+
+    def mttr(self) -> Optional[float]:
+        """Mean time to recovery: mean duration of *closed* degraded
+        windows (open ones never recovered, so they don't average in).
+        None when the link never died."""
+        ds = [w.duration for w in self.degraded
+              if w.closed and w.duration is not None]
+        return sum(ds) / len(ds) if ds else None
 
     def switch_drops(self, wake: float = 0.0) -> int:
         """Drops attributable to switching: arrivals inside a switch
@@ -241,6 +297,8 @@ class ServiceTimeline:
             "drained_in_switch": sum(1 for r in self.records
                                      if r.drained_in_switch),
             "n_clients": len(self.clients()),
+            "aborted_switches": sum(1 for w in self.windows if w.aborted),
+            "degraded_s": round(self.degraded_seconds(), 6),
         }
 
     def serialize(self) -> str:
@@ -253,9 +311,12 @@ class ServiceTimeline:
         return json.dumps({
             "t_end": self.t_end,
             "records": [[r.rid, r.client, r.t_arrival, r.t_start, r.t_done,
-                         r.split, r.drop_reason, r.drained_in_switch]
+                         r.split, r.drop_reason, r.drained_in_switch,
+                         r.degraded]
                         for r in self.records],
             "windows": [[w.t_start, w.t_end, w.strategy, w.full_outage,
-                         w.old_split, w.new_split, w.drained]
+                         w.old_split, w.new_split, w.drained, w.aborted]
                         for w in self.windows],
+            "degraded": [[w.t_start, w.t_end, w.split, w.reason]
+                         for w in self.degraded],
         }, sort_keys=True, separators=(",", ":"))
