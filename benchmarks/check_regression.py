@@ -7,7 +7,8 @@ until now nothing *compared* them to anything — the perf trajectory
 could silently regress under a green test suite.  By default every pair
 is checked (``BENCH_switch.json`` vs ``BENCH_baseline.json``,
 ``BENCH_handoff.json`` vs ``BENCH_handoff_baseline.json``,
-``BENCH_chaos.json`` vs ``BENCH_chaos_baseline.json``); passing
+``BENCH_chaos.json`` vs ``BENCH_chaos_baseline.json``,
+``BENCH_decode.json`` vs ``BENCH_decode_baseline.json``); passing
 ``--fresh``/``--baseline`` explicitly narrows the run to that single
 pair.  The check walks every numeric leaf a fresh/baseline pair share
 and flags:
@@ -15,7 +16,8 @@ and flags:
 * lower-is-better metrics (``*_ms``, ``us_per_*``) that grew by more
   than ``--tol`` x, and
 * higher-is-better metrics (``speedup_x``, ``*_reduction_x``,
-  ``*_frac`` — e.g. the hand-off plan's best-arm agreement) that shrank
+  ``*_frac`` — e.g. the hand-off plan's best-arm agreement — and
+  ``*_per_s`` throughputs like the decode bench's tokens/s) that shrank
   by more than the same factor;
 
 metrics only one side has are reported as informational drift, never
@@ -44,8 +46,10 @@ import sys
 from typing import Dict, Tuple
 
 # metric-name suffixes where bigger is BETTER (everything else numeric
-# is treated as lower-is-better: _ms timings, us_per_* costs)
-_HIGHER_IS_BETTER = ("speedup_x", "reduction_x", "_frac")
+# is treated as lower-is-better: _ms timings, us_per_* costs).  _per_s
+# covers the decode bench's throughput leaves (tokens_per_s, achieved
+# bytes/flops per second).
+_HIGHER_IS_BETTER = ("speedup_x", "reduction_x", "_frac", "_per_s")
 # bookkeeping leaves that are not performance metrics at all
 _SKIP = ("timestamp", "smoke", "bench", "cores", "run_id")
 
@@ -54,6 +58,7 @@ DEFAULT_PAIRS = (
     ("BENCH_switch.json", "BENCH_baseline.json"),
     ("BENCH_handoff.json", "BENCH_handoff_baseline.json"),
     ("BENCH_chaos.json", "BENCH_chaos_baseline.json"),
+    ("BENCH_decode.json", "BENCH_decode_baseline.json"),
 )
 
 

@@ -21,12 +21,16 @@
 #       and exit edge-only degraded mode, corrupted hand-offs heal
 #       bit-exactly; refreshes BENCH_chaos.json), the serve_pipeline
 #       example in --smoke mode (examples stay executable, not
-#       rotting), the switch-path microbenchmark (refreshes
+#       rotting), the decode hot-path microbenchmark in --smoke mode
+#       (fatal: the kernel/rolled serving decode path must hold
+#       tokens/s vs the reference path and its cold range-build wall
+#       must stay within tol of the committed baseline; refreshes
+#       BENCH_decode.json), the switch-path microbenchmark (refreshes
 #       BENCH_switch.json; non-fatal: perf noise must not mask a green
 #       suite) and the perf-regression check against the committed
 #       baselines (BENCH_baseline.json + BENCH_handoff_baseline.json +
-#       BENCH_chaos_baseline.json; warns by default, BENCH_STRICT=1
-#       turns regressions fatal).
+#       BENCH_chaos_baseline.json + BENCH_decode_baseline.json; warns
+#       by default, BENCH_STRICT=1 turns regressions fatal).
 #
 # Back-compat: SKIP_BENCH=1 forces tier-1 regardless of flags.
 set -euo pipefail
@@ -69,11 +73,18 @@ if [[ "$TIER" == "2" ]]; then
     rm -f BENCH_chaos.json
     run_py -m benchmarks.chaos --smoke
     run_py examples/serve_pipeline.py --smoke
+    # decode hot-path gate (fatal): the serving decode path must not
+    # lose tokens/s to the reference path, and the rolled-range cold
+    # compile wall must stay within tol of the committed baseline;
+    # refreshes BENCH_decode.json (same staleness rule as above)
+    rm -f BENCH_decode.json
+    run_py benchmarks/decode_micro.py --smoke
     # same staleness rule for the (non-fatal) switch microbenchmark
     rm -f BENCH_switch.json
     run_py benchmarks/switch_micro.py --smoke \
         || echo "WARN: switch_micro smoke failed (non-fatal)" >&2
     # warn-only by default; the scheduled workflow sets BENCH_STRICT=1
     # (+ a cross-host BENCH_TOL) so regressions actually fail somewhere
+    # (covers BENCH_switch/handoff/chaos/decode vs committed baselines)
     run_py benchmarks/check_regression.py --tol "${BENCH_TOL:-2.0}"
 fi

@@ -13,7 +13,7 @@ cited methods:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -186,3 +186,44 @@ def profile_transformer(cfg: ArchConfig, *, seq: int, batch: int = 1,
     units.append(UnitProfile("head", head_fl / (edge.flops * edge.mfu),
                              head_fl / (cloud.flops * cloud.mfu), 0, head_fl))
     return ModelProfile(cfg.name, units)
+
+
+# ---------------------------------------------------------------------------
+# measured-decode calibration
+# ---------------------------------------------------------------------------
+
+def calibrate_decode(profile: ModelProfile, timings: Sequence, *,
+                     split: int) -> Tuple[float, float]:
+    """Rescale per-unit timings so Eq.-1 pricing matches MEASURED decode.
+
+    ``timings`` are measured per-token stage walls from the serving path
+    (any objects with ``t_edge``/``t_cloud`` attributes, e.g. the
+    ``RequestTiming``s that ``StatefulEdgeCloudPipeline.process``
+    returns), taken at a known ``split`` — the same split-after-unit
+    index ``latency``/``optimal_split`` use (for a stateful pipeline at
+    layer split ``s`` that is ``stateful.unit_index_of_split(cfg, s)``).
+    The medians fix the absolute scale of the edge and cloud sides; the
+    analytic profile keeps fixing the *relative* per-layer shape.  This
+    is what lets ``optimal_split`` price the kernel-routed decode path
+    (``decode_impl="kernel"``) instead of whatever spec sheet the
+    analytic profile assumed: after a decode-path speedup the measured
+    walls shrink, the profile shrinks with them, and the split optimum
+    moves accordingly.
+
+    Mutates ``profile`` in place (``invalidate_cache`` is called, so
+    memoized ``optimal_split`` results are correctly dropped) and
+    returns the applied ``(edge_scale, cloud_scale)``."""
+    def med(xs):
+        return float(np.median(np.asarray(xs, np.float64)))
+    t_edge = med([t.t_edge for t in timings])
+    t_cloud = med([t.t_cloud for t in timings])
+    n, pe, pc = profile._prefix()
+    pred_e = float(pe[split])
+    pred_c = float(pc[n - 1] - pc[split])
+    scale_e = t_edge / pred_e if pred_e > 0 and t_edge > 0 else 1.0
+    scale_c = t_cloud / pred_c if pred_c > 0 and t_cloud > 0 else 1.0
+    for u in profile.units:
+        u.t_edge *= scale_e
+        u.t_cloud *= scale_c
+    profile.invalidate_cache()
+    return scale_e, scale_c

@@ -78,12 +78,14 @@ from repro.core.timing import Stopwatch
 from repro.core.pool import PipelinePool
 from repro.core.stages import abstractify, aval_fingerprint
 from repro.core.state_handoff import HandoffPlan, plan_handoff
+from repro.kernels import flash_decode as FD
 from repro.models import layers as Lyr
 from repro.models import ssm as SSM
 from repro.models import transformer as T
 
 _ATTN_FAMILIES = ("dense", "moe", "vlm")
 _SUPPORTED = _ATTN_FAMILIES + ("ssm", "hybrid")
+_DECODE_IMPLS = ("auto", "kernel", "reference")
 
 
 # ---------------------------------------------------------------------------
@@ -173,20 +175,55 @@ class StatefulStageRunner:
 
     Mirrors ``StageRunner``'s caching contract: warm builds share one
     AOT-executable cache per ``(mode, range, avals)``; ``fresh=True``
-    retraces+recompiles and leaves no trace ("new container")."""
+    retraces+recompiles and leaves no trace ("new container").
+
+    ``decode_impl`` selects the decode hot path: ``"kernel"`` routes
+    decode attention through the Pallas ``flash_decode`` kernel and SSM
+    steps through the ``mamba_scan``/``ssd_scan`` kernels; ``"reference"``
+    keeps the XLA reference ops; ``"auto"`` resolves ONCE at construction
+    to kernel on TPU and reference on CPU (where the Pallas kernels only
+    run in interpret mode — correct, so tests pin ``"kernel"`` for
+    parity, but orders slower than XLA).  ``rolled`` collapses each unit
+    range into a ``lax.scan`` over the stacked per-layer weights instead
+    of an unrolled Python loop, shrinking the HLO and the per-range AOT
+    compile wall; ``rolled=False`` keeps the unrolled trace for parity
+    tests and the decode microbenchmark's A/B."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_seq: int = 128,
-                 attn_impl: str = "chunked"):
+                 attn_impl: str = "chunked", decode_impl: str = "auto",
+                 rolled: bool = True):
         if cfg.family not in _SUPPORTED:
             raise ValueError(f"stateful serving unsupported for {cfg.family!r}")
+        if decode_impl not in _DECODE_IMPLS:
+            raise ValueError(f"decode_impl must be one of {_DECODE_IMPLS}, "
+                             f"got {decode_impl!r}")
         self.cfg = cfg
         self.params = params
         self.max_seq = int(max_seq)
         self.attn_impl = attn_impl
+        self.decode_impl = decode_impl
+        if decode_impl == "auto":
+            # resolved here, never inside a traced body (NK03): the
+            # backend cannot change under a live runner
+            decode_impl = ("kernel" if jax.default_backend() == "tpu"
+                           else "reference")
+        self.resolved_decode_impl = decode_impl
+        self.rolled = bool(rolled)
         self.units = unit_list(cfg)
         self._aot_cache: Dict[Tuple, Any] = {}
         self._full_cache: Dict[Tuple[int, int], Any] = {}
         self._lock = make_lock("stateful-runner", RANK_STATEFUL_RUNNER)
+
+    @property
+    def _ssm_impl(self) -> str:
+        return "pallas" if self.resolved_decode_impl == "kernel" else "jnp"
+
+    def _attend(self, q, kc, vc, pos):
+        """One-token attention vs the heads-major cache, routed per
+        ``decode_impl``.  Both paths take/return (B, 1, H, hd)."""
+        if self.resolved_decode_impl == "kernel":
+            return FD.flash_decode_attention(q, kc, vc, pos=pos + 1)
+        return Lyr.decode_attention(q, kc, vc, pos=pos + 1)
 
     @property
     def num_units(self) -> int:
@@ -224,7 +261,7 @@ class StatefulStageRunner:
                 cache[vk], v.transpose(0, 2, 1, 3).astype(cache[vk].dtype),
                 (0, 0, pos, 0))
             new[kk], new[vk] = kc, vc
-            att = Lyr.decode_attention(q, kc, vc, pos=pos + 1)
+            att = self._attend(q, kc, vc, pos)
             x = x + att.reshape(B, 1, -1) @ p["attn"]["wo"]
             h2 = T._apply_norm(cfg, p["ln2"], x)
             if "moe" in p:
@@ -238,7 +275,8 @@ class StatefulStageRunner:
         h = T._apply_norm(cfg, lp["ln"], x)
         block = SSM.mamba1_block if cfg.family == "ssm" else SSM.mamba2_block
         y, nc = block(lp["mamba"], h,
-                      cache={"conv": cache[ck], "ssm": cache[sk]}, cfg=cfg)
+                      cache={"conv": cache[ck], "ssm": cache[sk]}, cfg=cfg,
+                      impl=self._ssm_impl)
         new[ck], new[sk] = nc["conv"], nc["ssm"]
         return x + y
 
@@ -265,7 +303,118 @@ class StatefulStageRunner:
         return x + y
 
     # -- range functions -------------------------------------------------
-    def _make_decode_fn(self, u0: int, u1: int):
+    # Two trace shapes per range: "unrolled" replays the Python loop over
+    # units (one HLO copy per layer — O(layers) program size, and the
+    # per-range AOT compile wall that dominates cold builds), "rolled"
+    # scans ONE layer body over the stacked per-layer weights and caches
+    # (params["layers"] is already stacked on a leading L axis).  Hybrid
+    # ranges roll per homogeneous segment: runs of mamba layers scan,
+    # each shared-attn application stays a single unrolled unit.  Both
+    # traces honour the same (x, new_state, bounds) contract, so the
+    # session/hand-off machinery never sees the difference.
+
+    def _segments(self, u0: int, u1: int) -> List[Tuple[str, int, int]]:
+        """Units [u0, u1) as homogeneous spans: ``("layer", lo, hi)`` for
+        runs of consecutive decoder layers, ``("app", g, g+1)`` for each
+        shared-attention application."""
+        segs: List[Tuple[str, int, int]] = []
+        for kind, idx in self.units[u0:u1]:
+            if kind == "layer" and segs and segs[-1][0] == "layer" \
+                    and segs[-1][2] == idx:
+                segs[-1] = ("layer", segs[-1][1], idx + 1)
+            else:
+                segs.append((kind, idx, idx + 1))
+        return segs
+
+    def _decode_attn_span(self, params, x, cache, new, pos, rope, lo, hi):
+        """Scan the one-token attention-layer body over layers [lo, hi).
+        Per-layer KV caches ride as scan xs/ys (layer caches are
+        independent), so only ``x`` is carried."""
+        cfg = self.cfg
+        B = x.shape[0]
+        cos, sin = rope
+        lp = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        k_all = jnp.stack([cache[f"k{i}"] for i in range(lo, hi)])
+        v_all = jnp.stack([cache[f"v{i}"] for i in range(lo, hi)])
+
+        def body(x, xs):
+            p, kc, vc = xs
+            bound = x
+            h = T._apply_norm(cfg, p["ln1"], x)
+            q, k, v = T._project_qkv(cfg, p["attn"], h)
+            q = Lyr.apply_rope(q, cos[None], sin[None])
+            k = Lyr.apply_rope(k, cos[None], sin[None])
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.transpose(0, 2, 1, 3).astype(kc.dtype), (0, 0, pos, 0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.transpose(0, 2, 1, 3).astype(vc.dtype), (0, 0, pos, 0))
+            att = self._attend(q, kc, vc, pos)
+            x = x + att.reshape(B, 1, -1) @ p["attn"]["wo"]
+            h2 = T._apply_norm(cfg, p["ln2"], x)
+            if "moe" in p:
+                ff, _ = Lyr.moe_layer(p["moe"], h2, top_k=cfg.moe.top_k,
+                                      capacity_factor=cfg.moe.capacity_factor)
+            else:
+                ff = Lyr.mlp(p["mlp"], h2, gated=cfg.gated_mlp)
+            return x + ff, (bound, kc, vc)
+
+        x, (bounds, k_new, v_new) = jax.lax.scan(body, x, (lp, k_all, v_all))
+        for j, i in enumerate(range(lo, hi)):
+            new[f"k{i}"], new[f"v{i}"] = k_new[j], v_new[j]
+        return x, bounds
+
+    def _decode_ssm_span(self, params, x, cache, new, pos, lo, hi):
+        """Scan the one-token mamba-layer body over layers [lo, hi)."""
+        cfg = self.cfg
+        lp = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        conv_all = jnp.stack([cache[f"conv{i}"] for i in range(lo, hi)])
+        ssm_all = jnp.stack([cache[f"ssm{i}"] for i in range(lo, hi)])
+        block = SSM.mamba1_block if cfg.family == "ssm" else SSM.mamba2_block
+        impl = self._ssm_impl
+
+        def body(x, xs):
+            p, c, s0 = xs
+            bound = x
+            h = T._apply_norm(cfg, p["ln"], x)
+            y, nc = block(p["mamba"], h, cache={"conv": c, "ssm": s0},
+                          cfg=cfg, impl=impl)
+            return x + y, (bound, nc["conv"], nc["ssm"])
+
+        x, (bounds, convs, ssms) = jax.lax.scan(body, x,
+                                                (lp, conv_all, ssm_all))
+        for j, i in enumerate(range(lo, hi)):
+            new[f"conv{i}"], new[f"ssm{i}"] = convs[j], ssms[j]
+        return x, bounds
+
+    def _make_decode_fn_rolled(self, u0: int, u1: int):
+        segs = self._segments(u0, u1)
+        cfg = self.cfg
+
+        def fn(params, x, cache, pos):
+            new: Dict[str, Any] = {}
+            parts = []
+            rope = Lyr.rope_cos_sin(pos[None] if jnp.ndim(pos) == 0
+                                    else pos, cfg.head_dim, cfg.rope_theta)
+            for kind, lo, hi in segs:
+                if kind == "app":
+                    for g in range(lo, hi):
+                        parts.append(x[None])
+                        x = self._decode_unit(params, ("app", g), x, cache,
+                                              new, pos)
+                elif cfg.family in _ATTN_FAMILIES:
+                    x, b = self._decode_attn_span(params, x, cache, new,
+                                                  pos, rope, lo, hi)
+                    parts.append(b)
+                else:
+                    x, b = self._decode_ssm_span(params, x, cache, new,
+                                                 pos, lo, hi)
+                    parts.append(b)
+            b = jnp.concatenate(parts, 0) if parts \
+                else jnp.zeros((0,) + x.shape, x.dtype)
+            return x, new, b
+        return fn
+
+    def _make_decode_fn_unrolled(self, u0: int, u1: int):
         units = self.units[u0:u1]
 
         def fn(params, x, cache, pos):
@@ -279,7 +428,73 @@ class StatefulStageRunner:
             return x, new, b
         return fn
 
-    def _make_full_fn(self, u0: int, u1: int):
+    def _make_decode_fn(self, u0: int, u1: int):
+        if self.rolled:
+            return self._make_decode_fn_rolled(u0, u1)
+        return self._make_decode_fn_unrolled(u0, u1)
+
+    def _full_attn_span(self, params, x, caches, rope_cs, lo, hi):
+        cfg = self.cfg
+        lp = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+        def body(x, p):
+            bound = x
+            x, (k, v), _ = T.attn_block_full(cfg, p, x, rope_cs,
+                                             impl=self.attn_impl,
+                                             window=cfg.sliding_window)
+            return x, (bound, k, v)
+
+        x, (bounds, ks, vs) = jax.lax.scan(body, x, lp)
+        for j, i in enumerate(range(lo, hi)):
+            caches[f"k{i}"] = _fit_kv(ks[j], self.max_seq)
+            caches[f"v{i}"] = _fit_kv(vs[j], self.max_seq)
+        return x, bounds
+
+    def _full_ssm_span(self, params, x, caches, lo, hi):
+        cfg = self.cfg
+        lp = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        block = SSM.mamba1_block if cfg.family == "ssm" else SSM.mamba2_block
+
+        def body(x, p):
+            bound = x
+            h = T._apply_norm(cfg, p["ln"], x)
+            y, nc = block(p["mamba"], h, cfg=cfg)
+            return x + y, (bound, nc["conv"], nc["ssm"])
+
+        x, (bounds, convs, ssms) = jax.lax.scan(body, x, lp)
+        for j, i in enumerate(range(lo, hi)):
+            caches[f"conv{i}"], caches[f"ssm{i}"] = convs[j], ssms[j]
+        return x, bounds
+
+    def _make_full_fn_rolled(self, u0: int, u1: int):
+        segs = self._segments(u0, u1)
+        cfg = self.cfg
+
+        def fn(params, x):
+            S = x.shape[1]
+            rope_cs = Lyr.rope_cos_sin(jnp.arange(S), cfg.head_dim,
+                                       cfg.rope_theta)
+            caches: Dict[str, Any] = {}
+            parts = []
+            for kind, lo, hi in segs:
+                if kind == "app":
+                    for g in range(lo, hi):
+                        parts.append(x[None])
+                        x = self._full_unit(params, ("app", g), x, caches,
+                                            rope_cs)
+                elif cfg.family in _ATTN_FAMILIES:
+                    x, b = self._full_attn_span(params, x, caches, rope_cs,
+                                                lo, hi)
+                    parts.append(b)
+                else:
+                    x, b = self._full_ssm_span(params, x, caches, lo, hi)
+                    parts.append(b)
+            b = jnp.concatenate(parts, 0) if parts \
+                else jnp.zeros((0,) + x.shape, x.dtype)
+            return x, caches, b
+        return fn
+
+    def _make_full_fn_unrolled(self, u0: int, u1: int):
         units = self.units[u0:u1]
 
         def fn(params, x):
@@ -295,6 +510,11 @@ class StatefulStageRunner:
                 else jnp.zeros((0,) + x.shape, x.dtype)
             return x, caches, b
         return fn
+
+    def _make_full_fn(self, u0: int, u1: int):
+        if self.rolled:
+            return self._make_full_fn_rolled(u0, u1)
+        return self._make_full_fn_unrolled(u0, u1)
 
     # -- masked re-prefill (the recompute hand-off arm) ------------------
     # The recompute arm runs at whatever context length the stream has
@@ -999,16 +1219,19 @@ def make_stateful_manager(cfg: ArchConfig, params=None, *, split: int,
                           standby_split: Optional[int] = None,
                           warm_standbys: bool = False,
                           force_mode: Optional[str] = None,
-                          mem_budget_bytes: Optional[int] = None):
+                          mem_budget_bytes: Optional[int] = None,
+                          decode_impl: str = "auto", rolled: bool = True):
     """A ``PipelineManager`` whose pool serves a stateful decode stream.
 
     Prefills a seeded prompt so the session state (and its hand-off
     surface) exists before the first pipeline builds.  Returns
-    ``(manager, session)``."""
+    ``(manager, session)``.  ``decode_impl``/``rolled`` pin the runner's
+    decode hot path (kernel routing, lax.scan-rolled ranges)."""
     from repro.core.switching import PipelineManager
     if params is None:
         params = T.init_model(cfg, jax.random.PRNGKey(seed))
-    runner = StatefulStageRunner(cfg, params, max_seq=max_seq)
+    runner = StatefulStageRunner(cfg, params, max_seq=max_seq,
+                                 decode_impl=decode_impl, rolled=rolled)
     session = DecodeSession(runner)
     tokens = jax.random.randint(jax.random.PRNGKey(seed + 1),
                                 (batch, prompt_len), 0, cfg.vocab_size)

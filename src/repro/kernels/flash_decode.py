@@ -26,6 +26,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# smallest block the grid is still worth carving at; below this a pad
+# copy beats the tiny-block launch overhead
+_MIN_BLOCK_K = 16
+
+
+def _pick_block_k(S: int, block_k: int) -> int:
+    """Largest block size <= ``block_k`` that divides ``S``.
+
+    A non-dividing block forces ``jnp.pad`` of the WHOLE cache — an
+    O(cache) copy on every decode step, which defeats the point of a
+    cache-streamed kernel.  Runner caches are power-of-two ``max_seq``,
+    so the hot path always finds an exact divisor; only near-prime S
+    (divisors all < ``_MIN_BLOCK_K``) falls back to padding."""
+    block_k = min(block_k, S)
+    if S % block_k:
+        div = next((d for d in range(block_k, _MIN_BLOCK_K - 1, -1)
+                    if S % d == 0), None)
+        if div is not None:
+            block_k = div
+    return block_k
+
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
                    acc_scr, *, block_k, num_blocks, seq):
@@ -77,11 +98,13 @@ def flash_decode_attention(q, k_cache, v_cache, *, pos, block_k=512,
     if interpret is None:
         # nk: allow[NK03]: per-backend constant is deliberate (interpret on CPU)
         interpret = jax.default_backend() == "cpu"
-    block_k = min(block_k, S)
+    block_k = _pick_block_k(S, block_k)
     nb = -(-S // block_k)
     pad = nb * block_k - S
-    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp, vp = k_cache, v_cache
+    if pad:     # degenerate S only (near-prime): see _pick_block_k
+        kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
     qg = q.reshape(B, KH, G, D)
     pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 \
         else pos.astype(jnp.int32).reshape(1)

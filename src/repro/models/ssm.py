@@ -84,7 +84,7 @@ def mamba1_scan(dt, Bc, Cc, x, A, h0=None, chunk=256, impl="jnp"):
     return y, h
 
 
-def mamba2_scan(dt, Bc, Cc, x, A, h0=None, chunk=64):
+def mamba2_scan(dt, Bc, Cc, x, A, h0=None, chunk=64, impl="jnp"):
     # chunk=64 (vs 256 for mamba1): the mamba2 state (H, P, N) is ~16x
     # larger per step, and backward saves per-step h within a chunk.
     """SSD with scalar-per-head decay.
@@ -92,6 +92,10 @@ def mamba2_scan(dt, Bc, Cc, x, A, h0=None, chunk=64):
     dt: (B,S,H)  Bc,Cc: (B,S,N)  x: (B,S,H,P)  A: (H,)  h: (B,H,P,N)
     y_t = h_t . C_t  -> (B,S,H,P)
     """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, h = kops.ssd_scan(dt, Bc, Cc, x, A, h0=h0)
+        return y.astype(jnp.float32), h
     B, S, H = dt.shape
     P, N = x.shape[-1], Bc.shape[-1]
     chunk = min(chunk, S)
@@ -201,7 +205,7 @@ def init_mamba2(cfg, key, dtype):
     }
 
 
-def mamba2_block(params, x, cache=None, *, cfg):
+def mamba2_block(params, x, cache=None, *, cfg, impl="jnp"):
     """Mamba-2 (SSD, n_groups=1).  cache: {'conv': (B,K-1,Di+2N), 'ssm': (B,H,P,N)}."""
     s = cfg.ssm
     di = cfg.d_inner
@@ -219,7 +223,7 @@ def mamba2_block(params, x, cache=None, *, cfg):
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
     h0 = cache["ssm"] if cache is not None else None
-    y, h = mamba2_scan(dt, Bc, Cc, xh, A, h0=h0)
+    y, h = mamba2_scan(dt, Bc, Cc, xh, A, h0=h0, impl=impl)
     y = y + xh.astype(jnp.float32) * params["D"][:, None]
     y = y.reshape(B_, S, di).astype(x.dtype)
     # gated RMSNorm (mamba2)

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_decode import flash_decode_attention
+from repro.kernels.flash_decode import (_MIN_BLOCK_K, _pick_block_k,
+                                        flash_decode_attention)
 
 
 @pytest.mark.parametrize("B,H,KH,S,D,pos,bk", [
@@ -42,3 +43,26 @@ def test_flash_decode_traced_pos():
     out = f(q, kc, vc, jnp.int32(33))
     want = ref.decode_attention_ref(q, kc, vc, pos=33)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_pick_block_k_prefers_divisors():
+    assert _pick_block_k(128, 512) == 128        # cap at S
+    assert _pick_block_k(128, 32) == 32          # already divides
+    assert _pick_block_k(100, 32) == 25          # largest divisor <= 32
+    assert _pick_block_k(96, 512) == 96
+    # near-prime: no divisor >= _MIN_BLOCK_K, keep the requested block
+    assert 97 % _pick_block_k(97, 32) != 0
+
+
+def test_flash_decode_hot_path_copy_free():
+    """A dividing block size must not pad (= copy) the cache: the pad of
+    the whole cache per decode step is exactly the bug this guards."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, 16))
+    kc = jax.random.normal(ks[1], (1, 2, 100, 16))
+    vc = jax.random.normal(ks[2], (1, 2, 100, 16))
+    # S=100, block_k=32 -> divisor 25 is picked, no pad op in the trace
+    jaxpr = jax.make_jaxpr(
+        lambda q, kc, vc: flash_decode_attention(q, kc, vc, pos=60,
+                                                 block_k=32))(q, kc, vc)
+    assert " pad" not in str(jaxpr)

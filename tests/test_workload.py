@@ -311,14 +311,24 @@ def test_slo_aware_triggers_p99_repartition_mid_stream():
     # network path never wants to move, so any switch is p99-driven
     profile = pinned_split_profile(cfg.num_layers)
     mgr.serve(inputs)                           # absorb first-exec spike
-    _, timing = mgr.serve(inputs)
-    policy = SloAwarePolicy(slo_p99_s=slo_threshold(timing),
+    # fastest of a few warm serves: one sample can land 2-3x above
+    # steady state on a noisy host, inflating the SLO past anything the
+    # burst's queueing can reach ("no repartition fired" flake)
+    timing = min((mgr.serve(inputs)[1] for _ in range(5)),
+                 key=lambda t: t.total)
+    policy = SloAwarePolicy(slo_p99_s=slo_threshold(timing,
+                                                    slack_units=3.0),
                             window_s=4.0, cooldown_s=2.0)
     ctl = NeukonfigController(mgr, profile, BandwidthTrace([(0.0, 20.0)]),
                               strategy="switch_b2", policy=policy,
                               poll_dt=0.5)
     eng = ServingEngine(mgr, clock=VirtualClock(), controller=ctl)
-    clients = make_clients(2, "bursty(rate_on=40.0, rate_off=0.5, "
+    # rate_on must overload the edge on ANY host: occupancy is the real
+    # measured t_edge (~2-5 ms), so a marginal rate (e.g. 40/s/client)
+    # only builds queues when the host happens to be slow.  600/s/client
+    # saturates the 16-deep queues deterministically; the excess is shed
+    # by bounded admission, which is exactly what the policy reacts to.
+    clients = make_clients(2, "bursty(rate_on=600.0, rate_off=0.5, "
                               "mean_on=1.5, mean_off=1.5)",
                            inputs, queue_depth=16, seed=4)
     tl = eng.run(clients=clients, duration=12.0)
