@@ -17,8 +17,9 @@ and flags:
   than ``--tol`` x, and
 * higher-is-better metrics (``speedup_x``, ``*_reduction_x``,
   ``*_frac`` — e.g. the hand-off plan's best-arm agreement — and
-  ``*_per_s`` throughputs like the decode bench's tokens/s) that shrank
-  by more than the same factor;
+  ``*_per_s`` throughputs: the decode bench's tokens/s and the handoff
+  bench's per-slot-count session pool ``decode_tok_per_s`` leaves) that
+  shrank by more than the same factor;
 
 metrics only one side has are reported as informational drift, never
 failures (the benchmark schema is allowed to grow).

@@ -20,8 +20,11 @@
 #       switches are watchdog-aborted + rolled back, link outages enter
 #       and exit edge-only degraded mode, corrupted hand-offs heal
 #       bit-exactly; refreshes BENCH_chaos.json), the serve_pipeline
-#       example in --smoke mode (examples stay executable, not
-#       rotting), the decode hot-path microbenchmark in --smoke mode
+#       and serve_sessions examples in --smoke mode (examples stay
+#       executable, not rotting; serve_sessions additionally asserts a
+#       slot pool of concurrent sessions survives a mid-stream
+#       repartition with zero drops), the decode hot-path
+#       microbenchmark in --smoke mode
 #       (fatal: the kernel/rolled serving decode path must hold
 #       tokens/s vs the reference path and its cold range-build wall
 #       must stay within tol of the committed baseline; refreshes
@@ -73,6 +76,10 @@ if [[ "$TIER" == "2" ]]; then
     rm -f BENCH_chaos.json
     run_py -m benchmarks.chaos --smoke
     run_py examples/serve_pipeline.py --smoke
+    # multi-session slot-pool example (fatal: N concurrent sessions
+    # survive a mid-stream repartition with zero drops, per-session
+    # latency attribution prints)
+    run_py examples/serve_sessions.py --smoke
     # decode hot-path gate (fatal): the serving decode path must not
     # lose tokens/s to the reference path, and the rolled-range cold
     # compile wall must stay within tol of the committed baseline;

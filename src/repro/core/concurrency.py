@@ -38,6 +38,10 @@ RANK_STATEFUL_RUNNER = 42   # StatefulStageRunner._lock
 RANK_FAULT_INJECTOR = 45    # FaultPlan._lock (taken under the pool lock
                             # by the hand-off mutation hook; leaf-like:
                             # nothing is acquired while it is held)
+RANK_SESSION_MANAGER = 47   # SessionManager._lock (slot-pool metadata;
+                            # never held across runner/compile calls, so
+                            # it sits between the runner lock it must not
+                            # nest under and the per-session leaf lock)
 RANK_SESSION = 50       # DecodeSession._lock (innermost)
 
 

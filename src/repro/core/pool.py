@@ -35,6 +35,13 @@ error is recorded and surfaced as a ``BackgroundBuildFailed`` warning on
 the next ``wait``/``drain`` (on the calling thread, deterministically).
 The pool's mutating operations are guarded by an RLock, so the serving
 thread's pointer swap never races the worker's entry insertion.
+
+Stateful pools additionally carry a ``session`` — a single
+``DecodeSession`` or a slot-indexed ``SessionManager`` — whose per-layer
+decode state rides every activation via export/import (or masked
+recompute); see ``repro.core.stateful`` and ``repro.serving.sessions``.
+``memory_report()`` charges only pipeline weights; session slot-pool
+state is budgeted separately by the manager's own ``mem_budget_bytes``.
 """
 from __future__ import annotations
 

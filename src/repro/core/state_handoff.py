@@ -8,6 +8,12 @@ changes sides and must cross the link (or be recomputed by re-prefilling).
 This module prices both options per architecture — the quantity that
 decides which model families suit live repartitioning at all
 (DESIGN.md section 4: falcon-mamba hands off MBs where yi-34b hands off GBs).
+
+The ``batch`` axis prices multi-session slot pools: a pool serving N
+concurrent sessions hands off N rows of every moved layer's state in one
+batched payload, so both arms scale linearly in live-slot count —
+``SessionManager.slot_state_bytes`` charges admission/eviction against
+its memory budget through the same ``per_layer_state_bytes``.
 """
 from __future__ import annotations
 

@@ -54,6 +54,20 @@ head with the cloud stage):
     via ``strategies.apply_handoff``.  Every entry is epoch-stamped at
     build and re-synced — never trusted — when its epoch is stale at
     swap.  All four registered strategies work unchanged.
+
+Slot pools.  The single-stream ``DecodeSession`` is one point on a
+spectrum: ``repro.serving.sessions.SessionManager`` speaks the same
+interface (``step_pos``/``subset``/``commit_step``/``export_layers``/
+``import_layers``/``recompute_layers``/``handoff_net``) over a
+slot-indexed state pool with a ``(num_slots,)`` decode position, so the
+pipeline/pool/strategy machinery here serves a ragged multi-session
+batch unchanged.  To that end every decode/recompute function below
+accepts either a SCALAR position/length (shared by the whole batch —
+the historic single-session program, kept trace-for-trace identical) or
+a per-row ``(B,)`` VECTOR (each slot masks its own valid prefix; dead
+slots ride along at pos 0 and never influence live rows, because every
+decode op is row-independent — which is also why the row-coupled MoE
+family is excluded from slot pools).
 """
 from __future__ import annotations
 
@@ -220,10 +234,35 @@ class StatefulStageRunner:
 
     def _attend(self, q, kc, vc, pos):
         """One-token attention vs the heads-major cache, routed per
-        ``decode_impl``.  Both paths take/return (B, 1, H, hd)."""
+        ``decode_impl``.  Both paths take/return (B, 1, H, hd) and accept
+        a scalar or per-row ``(B,)`` decode position."""
         if self.resolved_decode_impl == "kernel":
             return FD.flash_decode_attention(q, kc, vc, pos=pos + 1)
         return Lyr.decode_attention(q, kc, vc, pos=pos + 1)
+
+    def _decode_rope(self, pos):
+        """One-token rope tables with an explicit batch axis: (1, 1, hd/2)
+        for a shared scalar position, (B, 1, hd/2) per-row — either way
+        ``apply_rope`` sees its batched (B, S, D/2) form."""
+        cfg = self.cfg
+        if jnp.ndim(pos) == 0:
+            cos, sin = Lyr.rope_cos_sin(pos[None], cfg.head_dim,
+                                        cfg.rope_theta)
+            return cos[None], sin[None]
+        cos, sin = Lyr.rope_cos_sin(pos[:, None], cfg.head_dim,
+                                    cfg.rope_theta)
+        return cos, sin
+
+    @staticmethod
+    def _cache_write(cache, val, pos):
+        """Write a one-token heads-major (B, KH, 1, hd) update at the
+        decode position: one ``dynamic_update_slice`` for a shared scalar
+        pos (the historic program), a vmapped per-row write for ``(B,)``."""
+        if jnp.ndim(pos) == 0:
+            return jax.lax.dynamic_update_slice(cache, val, (0, 0, pos, 0))
+        return jax.vmap(
+            lambda c, v, p: jax.lax.dynamic_update_slice(c, v, (0, p, 0))
+        )(cache, val, pos)
 
     @property
     def num_units(self) -> int:
@@ -250,16 +289,15 @@ class StatefulStageRunner:
             B = x.shape[0]
             h = T._apply_norm(cfg, p["ln1"], x)
             q, k, v = T._project_qkv(cfg, p["attn"], h)
-            cos, sin = Lyr.rope_cos_sin(pos[None], cfg.head_dim,
-                                        cfg.rope_theta)
-            q = Lyr.apply_rope(q, cos[None], sin[None])
-            k = Lyr.apply_rope(k, cos[None], sin[None])
-            kc = jax.lax.dynamic_update_slice(
+            cos, sin = self._decode_rope(pos)
+            q = Lyr.apply_rope(q, cos, sin)
+            k = Lyr.apply_rope(k, cos, sin)
+            kc = self._cache_write(
                 cache[kk], k.transpose(0, 2, 1, 3).astype(cache[kk].dtype),
-                (0, 0, pos, 0))
-            vc = jax.lax.dynamic_update_slice(
+                pos)
+            vc = self._cache_write(
                 cache[vk], v.transpose(0, 2, 1, 3).astype(cache[vk].dtype),
-                (0, 0, pos, 0))
+                pos)
             new[kk], new[vk] = kc, vc
             att = self._attend(q, kc, vc, pos)
             x = x + att.reshape(B, 1, -1) @ p["attn"]["wo"]
@@ -342,12 +380,12 @@ class StatefulStageRunner:
             bound = x
             h = T._apply_norm(cfg, p["ln1"], x)
             q, k, v = T._project_qkv(cfg, p["attn"], h)
-            q = Lyr.apply_rope(q, cos[None], sin[None])
-            k = Lyr.apply_rope(k, cos[None], sin[None])
-            kc = jax.lax.dynamic_update_slice(
-                kc, k.transpose(0, 2, 1, 3).astype(kc.dtype), (0, 0, pos, 0))
-            vc = jax.lax.dynamic_update_slice(
-                vc, v.transpose(0, 2, 1, 3).astype(vc.dtype), (0, 0, pos, 0))
+            q = Lyr.apply_rope(q, cos, sin)
+            k = Lyr.apply_rope(k, cos, sin)
+            kc = self._cache_write(
+                kc, k.transpose(0, 2, 1, 3).astype(kc.dtype), pos)
+            vc = self._cache_write(
+                vc, v.transpose(0, 2, 1, 3).astype(vc.dtype), pos)
             att = self._attend(q, kc, vc, pos)
             x = x + att.reshape(B, 1, -1) @ p["attn"]["wo"]
             h2 = T._apply_norm(cfg, p["ln2"], x)
@@ -393,8 +431,7 @@ class StatefulStageRunner:
         def fn(params, x, cache, pos):
             new: Dict[str, Any] = {}
             parts = []
-            rope = Lyr.rope_cos_sin(pos[None] if jnp.ndim(pos) == 0
-                                    else pos, cfg.head_dim, cfg.rope_theta)
+            rope = self._decode_rope(pos)
             for kind, lo, hi in segs:
                 if kind == "app":
                     for g in range(lo, hi):
@@ -532,6 +569,10 @@ class StatefulStageRunner:
         s = cfg.ssm
         di = cfg.d_inner
         B = x.shape[0]
+        # mask: (CL,) shared across the batch, or (B, CL) per-row (slot
+        # pools); either way dt sees its batched (B, CL, 1) form — the
+        # shared path broadcasts exactly as it always did
+        mask_b = mask[None] if mask.ndim == 1 else mask
         h = T._apply_norm(cfg, lp["ln"], x)
         p = lp["mamba"]
         if cfg.family == "ssm":            # mamba1
@@ -544,7 +585,7 @@ class StatefulStageRunner:
                                    axis=-1)
             dt = jax.nn.softplus(
                 dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
-                + p["dt_bias"]) * mask[None, :, None]
+                + p["dt_bias"]) * mask_b[:, :, None]
             A = -jnp.exp(p["A_log"])
             y, hs = SSM.mamba1_scan(dt.astype(xc.dtype), Bc, Cc, xc, A)
             y = y.astype(jnp.float32) + xc.astype(jnp.float32) * p["D"]
@@ -562,7 +603,7 @@ class StatefulStageRunner:
             S_len = x.shape[1]
             xh = xin.reshape(B, S_len, H, s.head_dim)
             dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]) \
-                * mask[None, :, None]
+                * mask_b[:, :, None]
             A = -jnp.exp(p["A_log"])
             y, hs = SSM.mamba2_scan(dt, Bc, Cc, xh, A)
             y = y + xh.astype(jnp.float32) * p["D"][:, None]
@@ -574,13 +615,19 @@ class StatefulStageRunner:
             out = y @ p["out_proj"]
             conv_src = xbc
         # conv state = the K-1 raw inputs trailing the LIVE length, not
-        # the pad (dynamic_slice at the traced length)
+        # the pad (dynamic_slice at the traced length; per-row lengths
+        # slice each row at its own live prefix)
         K = p["conv_w"].shape[0]
         C = conv_src.shape[-1]
         cat = jnp.concatenate(
             [jnp.zeros((B, K - 1, C), conv_src.dtype), conv_src], axis=1)
-        conv_state = jax.lax.dynamic_slice(
-            cat, (0, length, 0), (B, K - 1, C))
+        if jnp.ndim(length) == 0:
+            conv_state = jax.lax.dynamic_slice(
+                cat, (0, length, 0), (B, K - 1, C))
+        else:
+            conv_state = jax.vmap(
+                lambda c, l: jax.lax.dynamic_slice(c, (l, 0), (K - 1, C))
+            )(cat, length)
         return x + out, {"conv": conv_state, "ssm": hs}
 
     def _make_recompute_fn(self, u0: int, u1: int):
@@ -589,8 +636,14 @@ class StatefulStageRunner:
         CL = self.max_seq
 
         def fn(params, x, length):
-            # x: (B, CL, D) zero-padded context; length: live prefix
-            mask = (jnp.arange(CL) < length)
+            # x: (B, CL, D) zero-padded context; length: live prefix — a
+            # scalar shared by the batch or per-row (B,) (slot pools)
+            if jnp.ndim(length) == 0:
+                mask = (jnp.arange(CL) < length)
+                m = mask[None, :, None, None]
+            else:
+                mask = (jnp.arange(CL)[None, :] < length[:, None])
+                m = mask[:, :, None, None]
             rope_cs = Lyr.rope_cos_sin(jnp.arange(CL), cfg.head_dim,
                                        cfg.rope_theta)
             caches: Dict[str, Any] = {}
@@ -603,7 +656,6 @@ class StatefulStageRunner:
                     x, (k, v), _ = T.attn_block_full(
                         cfg, p, x, rope_cs, impl=self.attn_impl,
                         window=cfg.sliding_window)
-                    m = mask[None, :, None, None]
                     caches[kk] = (k * m).transpose(0, 2, 1, 3)
                     caches[vk] = (v * m).transpose(0, 2, 1, 3)
                 else:
@@ -623,6 +675,80 @@ class StatefulStageRunner:
                 self._full_cache[key] = jax.jit(
                     self._make_recompute_fn(u0, u1))
             return self._full_cache[key]
+
+    # -- masked admission (slot pools) -----------------------------------
+    # Admitting a session into a live slot pool is a masked prefill at the
+    # pool's fixed (B, max_seq) bucket: the same zero-pad + masked-dt
+    # trick as the recompute arm, extended to also return the per-unit
+    # boundary activations and the logits at each row's last live token.
+    # Compiled once per bucket shape, reused for every mid-flight join.
+
+    def _make_admit_fn(self):
+        cfg = self.cfg
+        CL = self.max_seq
+        units = self.units
+
+        def fn(params, tokens, length):
+            # tokens: (B, CL) zero-padded; length: live prefix — scalar
+            # shared by the batch or per-row (B,)
+            B = tokens.shape[0]
+            if jnp.ndim(length) == 0:
+                mask2 = (jnp.arange(CL) < length)[None]
+            else:
+                mask2 = (jnp.arange(CL)[None, :] < length[:, None])
+            m3 = mask2[:, :, None]
+            m4 = mask2[:, :, None, None]
+            rope_cs = Lyr.rope_cos_sin(jnp.arange(CL), cfg.head_dim,
+                                       cfg.rope_theta)
+            x = params["embed"][tokens]
+            caches: Dict[str, Any] = {}
+            bounds = []
+            for unit in units:
+                # boundary checkpoints are stored masked so slot buffers
+                # keep the zero-beyond-live-prefix invariant the sliced
+                # KV export/import path relies on
+                bounds.append(x * m3)
+                kind, idx = unit
+                if kind == "app" or cfg.family in _ATTN_FAMILIES:
+                    kk, vk = _unit_state_keys(cfg, unit)
+                    p = params["shared"] if kind == "app" \
+                        else jax.tree.map(lambda a: a[idx], params["layers"])
+                    x, (k, v), _ = T.attn_block_full(
+                        cfg, p, x, rope_cs, impl=self.attn_impl,
+                        window=cfg.sliding_window)
+                    caches[kk] = (k * m4).transpose(0, 2, 1, 3)
+                    caches[vk] = (v * m4).transpose(0, 2, 1, 3)
+                else:
+                    ck, sk = _unit_state_keys(cfg, unit)
+                    lp = jax.tree.map(lambda a: a[idx], params["layers"])
+                    x, st = self._masked_mamba(lp, x, mask2, length)
+                    caches[ck], caches[sk] = st["conv"], st["ssm"]
+            D = x.shape[-1]
+            if jnp.ndim(length) == 0:
+                last = jax.lax.dynamic_slice(x, (0, length - 1, 0),
+                                             (B, 1, D))
+            else:
+                # rows with length 0 (dead slots) clamp to position 0 and
+                # produce garbage logits the caller masks out
+                last = jax.vmap(
+                    lambda xi, l: jax.lax.dynamic_slice(xi, (l - 1, 0),
+                                                        (1, D))
+                )(x, length)
+            h = T._apply_norm(cfg, params["final_norm"], last)
+            logits = (h[:, -1] @ T.lm_head_weights(cfg, params)).astype(
+                jnp.float32)
+            b = jnp.stack(bounds) if bounds \
+                else jnp.zeros((0, B, CL, x.shape[-1]), x.dtype)
+            return logits, caches, b
+        return fn
+
+    def admit_fn(self):
+        """Cached masked-admission fn ``(params, tokens, length) ->
+        (last_logits, caches, bounds)`` over the full unit range."""
+        with self._lock:
+            if ("admit",) not in self._full_cache:
+                self._full_cache[("admit",)] = jax.jit(self._make_admit_fn())
+            return self._full_cache[("admit",)]
 
     def _make_embed_fn(self):
         def fn(params, tokens):
@@ -801,6 +927,13 @@ class DecodeSession:
         """Greedy next token from the last logits (the decode stream)."""
         assert self.last_logits is not None, "session not prefilled"
         return jnp.argmax(self.last_logits, -1)[:, None].astype(jnp.int32)
+
+    def step_pos(self):
+        """Decode-position operand for the next step.  The single-stream
+        session shares one scalar across its batch; slot pools override
+        this with a per-slot ``(num_slots,)`` vector — the pipeline
+        derives its compiled position aval from this shape."""
+        return jnp.int32(self.pos)
 
     def commit_step(self, token, new_state: Dict[str, Any], bounds,
                     logits) -> None:
@@ -994,7 +1127,9 @@ class StatefulEdgeCloudPipeline:
         B, D = s.batch, r.cfg.d_model
         x_av = jax.ShapeDtypeStruct((B, 1, D), jnp.float32)
         tok_av = jax.ShapeDtypeStruct((B, 1), jnp.int32)
-        pos_av = jax.ShapeDtypeStruct((), jnp.int32)
+        # scalar for the single-stream session, (num_slots,) for slot
+        # pools — the compiled stages follow the session's position shape
+        pos_av = jax.ShapeDtypeStruct(jnp.shape(s.step_pos()), jnp.int32)
         sw_wall = Stopwatch()
         sw = Stopwatch()
         self.embed_fn = r.executable("embed", 0, 0, self.params, tok_av,
@@ -1053,7 +1188,7 @@ class StatefulEdgeCloudPipeline:
             token = inputs.get("token")
         if token is None:
             token = s.next_token()
-        pos = jnp.int32(s.pos)
+        pos = s.step_pos()
         logits, new, bounds, timing = self._step(
             jnp.asarray(token, jnp.int32), s.subset(0, self._u_edge),
             s.subset(self._u_edge, self._u_all), pos)
@@ -1068,7 +1203,8 @@ class StatefulEdgeCloudPipeline:
         tok = jnp.zeros((s.batch, 1), jnp.int32)
         _, _, _, timing = self._step(
             tok, zeros(s.subset(0, self._u_edge)),
-            zeros(s.subset(self._u_edge, self._u_all)), jnp.int32(0))
+            zeros(s.subset(self._u_edge, self._u_all)),
+            jnp.zeros_like(s.step_pos()))
         return timing
 
     # -- memory accounting ------------------------------------------------

@@ -49,6 +49,13 @@ Every ``SwitchReport`` therefore separates
 
 If a switch targets a key whose speculative build is still in flight, the
 strategy *awaits that build* instead of duplicating it (a "wait-hit").
+
+Strategies are session-agnostic: when the pool carries decode state (one
+``DecodeSession`` or a multi-session ``SessionManager`` slot pool), the
+state hand-off — whole-batch export/import or masked recompute, chosen
+per ``plan_handoff`` — happens inside the pool's activation step, so
+every strategy above moves N concurrent sessions as one payload with no
+strategy-side changes.
 """
 from __future__ import annotations
 

@@ -49,7 +49,7 @@ def _pick_block_k(S: int, block_k: int) -> int:
 
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-                   acc_scr, *, block_k, num_blocks, seq):
+                   acc_scr, *, block_k, num_blocks, seq, per_row):
     kj = pl.program_id(2)
 
     @pl.when(kj == 0)
@@ -58,7 +58,10 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    pos = pos_ref[0]
+    # per_row is a trace-time Python bool: the shared-pos program is
+    # byte-identical to the pre-slot-pool kernel, the ragged program
+    # indexes this batch row's own valid prefix from SMEM
+    pos = pos_ref[pl.program_id(0)] if per_row else pos_ref[0]
     k_start = kj * block_k
 
     @pl.when(k_start < pos)       # skip blocks past the valid prefix
@@ -90,8 +93,11 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 def flash_decode_attention(q, k_cache, v_cache, *, pos, block_k=512,
                            interpret=None):
-    """q: (B, 1, H, D); k/v_cache HEADS-MAJOR (B, KH, S, D); pos: scalar
-    count of valid entries.  Returns (B, 1, H, D)."""
+    """q: (B, 1, H, D); k/v_cache HEADS-MAJOR (B, KH, S, D); pos: count of
+    valid entries — a scalar shared by the whole batch, or a ``(B,)``
+    vector for ragged slot pools (each row masks its own prefix; rows
+    with pos 0 attend to nothing and produce zeros).  Returns
+    (B, 1, H, D)."""
     B, _, H, D = q.shape
     KH, S = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
@@ -106,11 +112,19 @@ def flash_decode_attention(q, k_cache, v_cache, *, pos, block_k=512,
         kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
     qg = q.reshape(B, KH, G, D)
-    pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 \
-        else pos.astype(jnp.int32).reshape(1)
+    # shared pos stays a (1,) SMEM scalar (the historic program); a (B,)
+    # vector keeps one entry per batch row and flips the kernel into
+    # per-row masking.  A size-1 vector is folded onto the scalar path so
+    # slot-count-1 pools compile the exact single-session program.
+    per_row = jnp.ndim(pos) == 1 and pos.shape[0] > 1
+    if per_row:
+        pos_arr = pos.astype(jnp.int32).reshape(B)
+    else:
+        pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 \
+            else pos.astype(jnp.int32).reshape(1)
 
     kernel = functools.partial(_decode_kernel, block_k=block_k,
-                               num_blocks=nb, seq=S)
+                               num_blocks=nb, seq=S, per_row=per_row)
     out = pl.pallas_call(
         kernel,
         grid=(B, KH, nb),

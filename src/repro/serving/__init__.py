@@ -1,10 +1,14 @@
 """Serving layer: the request-stream ServingEngine (measured downtime on a
 live stream — see ``engine``), the workload subsystem (seeded arrival
-processes + multi-client streams — see ``workload``) and the conventional
-KV-cache batching server used by the serve example (``server``)."""
+processes + multi-client streams — see ``workload``), the slot-indexed
+multi-session decode pool (``sessions``) and the conventional KV-cache
+batching server built on it (``server``).  ``docs/serving.md`` maps the
+end-to-end data flow."""
 from repro.serving.clock import Clock, VirtualClock, WallClock, quantize
 from repro.serving.engine import ServingEngine, StageWorker, request_stream
 from repro.serving.server import BatchingServer, Request, state_nbytes
+from repro.serving.sessions import (SessionManager, SlotPoolFull,
+                                    make_session_manager)
 from repro.serving.sim import SimPipeline, SimPool, SimRunner
 from repro.serving.timeline import (DegradedWindow, RequestRecord,
                                     ServiceTimeline, SwitchWindow)

@@ -52,6 +52,14 @@ round-robin over ``ClientStream.weight``).  Every ``RequestRecord``
 carries its client id, so the timeline derives per-client drop rates and
 latency percentiles (``ServiceTimeline.client_summary``).
 
+Multi-session slot pools: when the pool carries a
+``repro.serving.sessions.SessionManager`` (built via
+``make_session_manager``), every served request is stamped with the live
+session ids (``ServiceTimeline.session_summary``), and
+``schedule_admit`` scripts mid-flight admissions — a new session prefills
+into a masked slot on the serving loop, charged to the stream clock,
+while the other slots' decode state is untouched.
+
 Which numbers are measured vs simulated: everything the engine reports is
 measured (stage walls, switch walls, per-request stream timestamps).  The
 stand-alone ``core/downtime.simulate_window`` remains as an analytic
@@ -149,6 +157,7 @@ class ServingEngine:
         self._degraded = False
         self._pre_degraded_split: Optional[int] = None
         self._scheduled_net: List[Tuple[float, float, float]] = []
+        self._scheduled_admits: List[Tuple[float, object, object]] = []
         self.clock = clock if clock is not None else VirtualClock()
         self.timeline = timeline if timeline is not None else ServiceTimeline()
         self.queue_depth = int(queue_depth)
@@ -191,6 +200,28 @@ class ServingEngine:
         """Script a repartition at stream time ``t`` (optionally changing
         the link bandwidth first) — the controller-less benchmark path."""
         self._scheduled.append((t, strategy, new_split, bandwidth_mbps))
+
+    def schedule_admit(self, t: float, prompt, sid=None) -> None:
+        """Script a mid-flight session admission at stream time ``t``: the
+        pool's ``SessionManager`` prefills ``prompt`` into a free (or
+        preempted) slot while the other sessions keep decoding.  Requires
+        a stateful pool built with a slot pool
+        (``repro.serving.sessions.make_session_manager``)."""
+        self._scheduled_admits.append((t, prompt, sid))
+
+    def execute_admit(self, prompt, sid=None) -> str:
+        """Admit one session now, measured on the stream: the admission
+        prefill's wall duration is charged to the stream clock (it runs on
+        the serving loop, like a switch — but per-slot, so the live slots'
+        decode state is never touched)."""
+        sess = getattr(self.pool, "session", None)
+        if sess is None or not hasattr(sess, "admit"):
+            raise RuntimeError("scheduled admission needs a slot-pool "
+                               "session (make_session_manager)")
+        with self.clock.measure():
+            out = sess.admit(prompt, sid=sid)
+        self._blocked_until = max(self._blocked_until, self.clock.now())
+        return out
 
     def execute_switch(self, strategy, new_split: int):
         """Run one repartition on the serving loop, measured on the stream.
@@ -384,6 +415,7 @@ class ServingEngine:
         _, timing = entry.pipeline.process(inputs)
         if self.fault_plan is not None:
             timing = self.fault_plan.perturb_timing(rec.rid, timing)
+        sessions = self._live_sessions()
         if self._degraded:
             # edge-only: the cloud is unreachable, so any residual cloud
             # share executes on the edge hardware (scaled by how much
@@ -392,7 +424,8 @@ class ServingEngine:
             done = self.edge.occupy(start,
                                     timing.t_edge + timing.t_cloud * scale)
             self.timeline.serve(rec, t_start=start, t_done=done,
-                                split=entry.split, degraded=True)
+                                split=entry.split, degraded=True,
+                                sessions=sessions)
             self._inflight.append((done, rec))
             return done
         if not math.isfinite(timing.t_transfer):
@@ -403,9 +436,17 @@ class ServingEngine:
         edge_end = self.edge.occupy(start, timing.t_edge)
         cloud_start = max(edge_end + timing.t_transfer, self.cloud.busy_until)
         done = self.cloud.occupy(cloud_start, timing.t_cloud)
-        self.timeline.serve(rec, t_start=start, t_done=done, split=entry.split)
+        self.timeline.serve(rec, t_start=start, t_done=done, split=entry.split,
+                            sessions=sessions)
         self._inflight.append((done, rec))
         return done
+
+    def _live_sessions(self) -> Optional[tuple]:
+        """Live slot-pool session ids, for per-session attribution on the
+        timeline (None when the pool carries no multi-session state)."""
+        sess = getattr(self.pool, "session", None)
+        ids = getattr(sess, "session_ids", None)
+        return tuple(ids()) if callable(ids) else None
 
     def _admit(self, t: float, inputs) -> None:
         rec = self.timeline.admit(next(self._rid), t)
@@ -569,6 +610,10 @@ class ServingEngine:
             heapq.heappush(heap, (t, _PRIO_NET, next(seq), "setnet",
                                   (bw, lat)))
             duration = max(duration, t)
+        for t, prompt, sid in self._scheduled_admits:
+            heapq.heappush(heap, (t, _PRIO_CMD, next(seq), "admit",
+                                  (prompt, sid)))
+            duration = max(duration, t)
         if self.controller is not None:
             for t in self.controller.network_events(duration):
                 heapq.heappush(heap, (t, _PRIO_NET, next(seq), "net", None))
@@ -605,6 +650,9 @@ class ServingEngine:
                 self.set_network(NetworkModel(bw, latency_ms=lat))
             elif kind == "observe":
                 self.controller.observe_tick(t)
+            elif kind == "admit":
+                prompt, sid = payload
+                self.execute_admit(prompt, sid=sid)
             else:                       # scripted switch
                 strat, split, bw = payload
                 if bw is not None:

@@ -34,6 +34,9 @@ class RequestRecord:
                                         # anonymous source)
     degraded: bool = False              # served in edge-only degraded mode
                                         # (cloud link down, breaker open)
+    sessions: Optional[tuple] = None    # live decode-session ids sharing the
+                                        # slot pool when this request was
+                                        # served (None: stateless pipeline)
 
     @property
     def served(self) -> bool:
@@ -122,9 +125,11 @@ class ServiceTimeline:
         rec.drop_reason = reason
 
     def serve(self, rec: RequestRecord, *, t_start: float, t_done: float,
-              split: int, degraded: bool = False) -> None:
+              split: int, degraded: bool = False,
+              sessions: Optional[tuple] = None) -> None:
         rec.t_start, rec.t_done, rec.split = t_start, t_done, split
         rec.degraded = degraded
+        rec.sessions = sessions
         bisect.insort(self._completions, (t_done, t_done - rec.t_arrival))
 
     def record_switch(self, window: SwitchWindow) -> None:
@@ -277,6 +282,29 @@ class ServiceTimeline:
             }
         return out
 
+    def session_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-decode-session attribution: how many served requests each
+        slot-pool session id was live for, and the latency percentiles of
+        those requests.  Empty for stateless pipelines (no slot pool)."""
+        groups: Dict[str, List[RequestRecord]] = {}
+        for r in self.records:
+            for sid in (r.sessions or ()):
+                groups.setdefault(sid, []).append(r)
+        out: Dict[str, Dict[str, float]] = {}
+        for sid, recs in groups.items():
+            lat = np.asarray([r.latency for r in recs if r.served],
+                             dtype=np.float64)
+            out[sid] = {
+                "served": int(lat.size),
+                # None, not NaN: same JSONL-strictness rule as
+                # client_summary above
+                "p50_ms": round(float(np.percentile(lat, 50.0)) * 1e3, 3)
+                if lat.size else None,
+                "p99_ms": round(float(np.percentile(lat, 99.0)) * 1e3, 3)
+                if lat.size else None,
+            }
+        return out
+
     def outage_bounds(self) -> Optional[tuple]:
         """Derive the outage interval purely from the request stream: the
         arrival span of requests dropped for "outage".  Cross-checks the
@@ -312,7 +340,8 @@ class ServiceTimeline:
             "t_end": self.t_end,
             "records": [[r.rid, r.client, r.t_arrival, r.t_start, r.t_done,
                          r.split, r.drop_reason, r.drained_in_switch,
-                         r.degraded]
+                         r.degraded,
+                         None if r.sessions is None else list(r.sessions)]
                         for r in self.records],
             "windows": [[w.t_start, w.t_end, w.strategy, w.full_outage,
                          w.old_split, w.new_split, w.drained, w.aborted]

@@ -409,3 +409,38 @@ def test_corrupt_handoff_falls_back_to_recompute():
     out, _ = mgr.active.process()            # recovered state still decodes
     assert np.isfinite(np.asarray(out)).all()
     mgr.close()
+
+
+def test_corrupt_batch_handoff_falls_back_to_per_slot_recompute():
+    """A corrupted whole-batch hand-off (slot pool, several ragged
+    sessions in flight) is detected by the integrity envelope and every
+    slot is rebuilt by the masked fixed-shape recompute — bit-identical
+    per slot to a pool that never switched."""
+    from repro.serving import make_session_manager
+    cfg = dataclasses.replace(get_config("qwen2.5-3b").reduced(),
+                              num_layers=2)
+    mgr, sm = make_session_manager(cfg, split=2, net=NetworkModel(1000.0),
+                                   num_slots=3, max_seq=32, seed=0,
+                                   force_mode="transfer")
+    rng = np.random.default_rng(11)
+    sids = [sm.admit(rng.integers(0, cfg.vocab_size,
+                                  size=n).astype(np.int32))
+            for n in (4, 7, 5)]
+    mgr.active.process()
+    snap = sm.snapshot()
+    mgr.active.process()                     # control arm: no switch
+    control = {s: (sm.logits_for(s), sm.tokens_for(s)) for s in sids}
+    sm.restore(snap)
+
+    mgr.pool.fault_plan = faults("handoff_corrupt(p=1.0)").arm()
+    with pytest.warns(HandoffIntegrityWarning):
+        mgr.repartition("switch_b2", 1)
+    h = mgr.pool.handoffs[-1]
+    assert h.fallback and h.mode == "recompute"
+    mgr.active.process()
+    assert set(sm.session_ids()) == set(sids)    # zero dropped
+    for s in sids:
+        logits, toks = control[s]
+        np.testing.assert_array_equal(sm.logits_for(s), logits, err_msg=s)
+        np.testing.assert_array_equal(sm.tokens_for(s), toks, err_msg=s)
+    mgr.close()

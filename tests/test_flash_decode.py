@@ -66,3 +66,41 @@ def test_flash_decode_hot_path_copy_free():
         lambda q, kc, vc: flash_decode_attention(q, kc, vc, pos=60,
                                                  block_k=32))(q, kc, vc)
     assert " pad" not in str(jaxpr)
+
+
+def test_flash_decode_per_row_pos_matches_ref():
+    """(B,)-vector pos: each row attends over its own prefix (the slot
+    pool's ragged sessions), and a dead slot (pos=0) yields exact zeros
+    instead of NaN from an all-masked softmax."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, H, KH, S, D = 4, 4, 2, 64, 16
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kc = jax.random.normal(ks[1], (B, KH, S, D))
+    vc = jax.random.normal(ks[2], (B, KH, S, D))
+    rows = [40, 1, 0, 64]
+    out = flash_decode_attention(q, kc, vc,
+                                 pos=jnp.asarray(rows, jnp.int32),
+                                 block_k=16)
+    for i, p in enumerate(rows):
+        if p == 0:
+            np.testing.assert_array_equal(np.asarray(out[i]), 0.0)
+            continue
+        want = ref.decode_attention_ref(q[i:i + 1], kc[i:i + 1],
+                                        vc[i:i + 1], pos=p)
+        np.testing.assert_allclose(np.asarray(out[i]),
+                                   np.asarray(want[0]), atol=1e-4,
+                                   err_msg=f"row {i} pos {p}")
+
+
+def test_flash_decode_size1_vector_pos_folds_to_scalar_path():
+    """A length-1 pos vector must reproduce the scalar-pos program
+    bit-exactly — the slot-count-1 pool rides the historic trace."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, 16))
+    kc = jax.random.normal(ks[1], (1, 2, 64, 16))
+    vc = jax.random.normal(ks[2], (1, 2, 64, 16))
+    a = flash_decode_attention(q, kc, vc, pos=33, block_k=16)
+    b = flash_decode_attention(q, kc, vc,
+                               pos=jnp.asarray([33], jnp.int32),
+                               block_k=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
