@@ -8,7 +8,8 @@ could silently regress under a green test suite.  By default every pair
 is checked (``BENCH_switch.json`` vs ``BENCH_baseline.json``,
 ``BENCH_handoff.json`` vs ``BENCH_handoff_baseline.json``,
 ``BENCH_chaos.json`` vs ``BENCH_chaos_baseline.json``,
-``BENCH_decode.json`` vs ``BENCH_decode_baseline.json``); passing
+``BENCH_decode.json`` vs ``BENCH_decode_baseline.json``,
+``BENCH_shard.json`` vs ``BENCH_shard_baseline.json``); passing
 ``--fresh``/``--baseline`` explicitly narrows the run to that single
 pair.  The check walks every numeric leaf a fresh/baseline pair share
 and flags:
@@ -60,6 +61,7 @@ DEFAULT_PAIRS = (
     ("BENCH_handoff.json", "BENCH_handoff_baseline.json"),
     ("BENCH_chaos.json", "BENCH_chaos_baseline.json"),
     ("BENCH_decode.json", "BENCH_decode_baseline.json"),
+    ("BENCH_shard.json", "BENCH_shard_baseline.json"),
 )
 
 

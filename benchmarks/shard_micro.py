@@ -1,0 +1,246 @@
+"""Sharded-cloud-stage microbenchmark: per-mesh latency model fit and
+mesh-shape-changing repartitions.
+
+Sweeps {config x mesh shape x split} over real ``EdgeCloudPipeline``
+builds whose cloud stage runs tensor-parallel on a fake-device CPU mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set below
+before jax initialises), and reports per cell:
+
+* ``cloud_ms`` / ``edge_ms``   — measured stage walls at that split;
+* ``pred_cloud_ms``            — the per-mesh latency model's price for
+  the same cell (``ModelProfile.mesh_cloud_time``), after
+  ``calibrate_decode`` + ``calibrate_mesh`` fitted the model on ONE
+  split per mesh — every other split is an out-of-sample check;
+* ``model_agreement_frac``     — min(pred, meas)/max(pred, meas), the
+  roofline-style agreement metric (1.0 = exact; ``_frac`` suffix makes
+  ``check_regression.py`` treat it as higher-is-better).
+
+Then, per registered switch strategy, one mesh-shape-changing
+repartition (single device <-> 2-way mesh) measuring the on-stream
+resharding wall the activation recorded (``SwitchReport.t_reshard``,
+inside ``t_switch``) — the downtime attribution this PR's API exists
+for.  Written to ``BENCH_shard.json``; the committed
+``BENCH_shard_baseline.json`` guards the trajectory.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/shard_micro.py [--smoke]
+
+``--smoke`` (the tier-2 CI mode) is FATAL on two conditions:
+
+* every registered strategy must complete the mesh-changing repartition
+  and record the transition (``mesh_change`` with the right shapes);
+* the per-mesh model must agree with the measured cells:
+  geomean ``model_agreement_frac`` >= ``SHARD_TOL`` (default 0.25 —
+  fake-device CPU walls are noisy; the fit quality that matters is
+  relative, not absolute).
+"""
+from __future__ import annotations
+
+import os
+
+# must land before jax initialises its backend (a no-op if the caller
+# already forced a device count)
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import math
+import sys
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import NetworkModel, PipelineManager, StageRunner
+from repro.core.profiler import (calibrate_decode, calibrate_mesh,
+                                 profile_transformer)
+from repro.core.strategies import available_strategies
+from repro.models import transformer as T
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CONFIGS = {
+    "dense": ("qwen2.5-3b", 4),      # GQA attention
+    "moe": ("qwen2-moe-a2.7b", 4),   # expert/tensor-parallel experts
+}
+PROMPT = 8
+
+
+def _measure(mgr, inputs, reps):
+    """Median stage walls (seconds) over ``reps`` serves."""
+    mgr.serve(inputs)                               # absorb first-exec spike
+    ts = [mgr.serve(inputs)[1] for _ in range(reps)]
+    med = lambda xs: float(np.median(np.asarray(xs, np.float64)))
+    return ts, med([t.t_edge for t in ts]), med([t.t_cloud for t in ts])
+
+
+def bench_config(name, *, mesh_shapes, splits, reps):
+    """One {mesh x split} grid over a single config + its model fit."""
+    arch, num_layers = CONFIGS[name]
+    cfg = replace(get_config(arch).reduced(), num_layers=num_layers)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    runner = StageRunner(cfg, params)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1),
+                                         (1, PROMPT), 0, cfg.vocab_size))
+    inputs = {"tokens": toks}
+    net = NetworkModel(100.0)
+    profile = profile_transformer(cfg, seq=PROMPT)
+
+    mgr = PipelineManager(runner, split=splits[0], net=net,
+                          sample_inputs=inputs)
+    cells = {}
+    try:
+        for mesh in mesh_shapes:
+            mgr.set_mesh_shape(mesh)
+            for i, split in enumerate(splits):
+                tag = f"{name}_m{'x'.join(map(str, mesh)) if mesh else '1'}" \
+                      f"_s{split}"
+                print(f"# shard_micro: {tag} ...", flush=True)
+                rep = mgr.repartition("switch_b1", split)
+                ts, t_edge, t_cloud = _measure(mgr, inputs, reps)
+                # fit the model on the FIRST split of each mesh; the
+                # remaining splits are out-of-sample agreement checks
+                if i == 0 and mesh is None:
+                    calibrate_decode(profile, ts, split=split - 1)
+                elif i == 0:
+                    calibrate_mesh(profile, ts, split=split - 1,
+                                   mesh_shape=mesh)
+                _, _, pred_c = profile.latency(split - 1, net,
+                                               mesh_shape=mesh)
+                agree = min(pred_c, t_cloud) / max(pred_c, t_cloud) \
+                    if pred_c > 0 and t_cloud > 0 else 0.0
+                cells[tag] = {
+                    "edge_ms": round(t_edge * 1e3, 3),
+                    "cloud_ms": round(t_cloud * 1e3, 3),
+                    "pred_cloud_ms": round(pred_c * 1e3, 3),
+                    "model_agreement_frac": round(agree, 3),
+                    "calibration_point": i == 0,
+                    "t_reshard_ms": round(rep.t_reshard * 1e3, 3),
+                    "mesh_change": rep.mesh_change,
+                }
+    finally:
+        mgr.close()
+    return cells
+
+
+def bench_strategies(*, mesh, reps):
+    """One mesh-shape-changing repartition per registered strategy,
+    alternating single-device <-> mesh so every switch is a transition."""
+    arch, num_layers = CONFIGS["dense"]
+    cfg = replace(get_config(arch).reduced(), num_layers=num_layers)
+    params = T.init_model(cfg, jax.random.PRNGKey(0))
+    runner = StageRunner(cfg, params)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1),
+                                         (1, PROMPT), 0, cfg.vocab_size))
+    inputs = {"tokens": toks}
+    mgr = PipelineManager(runner, split=1, net=NetworkModel(100.0),
+                          sample_inputs=inputs)
+    out = {}
+    try:
+        on_mesh = False
+        for strat in sorted(available_strategies()):
+            target_mesh = None if on_mesh else mesh
+            target_split = 1 if on_mesh else 2
+            mgr.set_mesh_shape(target_mesh)
+            mgr.build_standby(target_split)   # switch_a needs a live standby
+            mgr.drain()
+            print(f"# shard_micro: strategy {strat} -> mesh "
+                  f"{target_mesh} ...", flush=True)
+            rep = mgr.repartition(strat, target_split)
+            mgr.serve(inputs)                 # the new placement serves
+            out[strat] = {
+                "t_reshard_ms": round(rep.t_reshard * 1e3, 3),
+                "t_switch_ms": round(rep.t_switch * 1e3, 3),
+                "t_blocked_ms": round(rep.t_blocked * 1e3, 3),
+                "downtime_ms": round(rep.downtime * 1e3, 3),
+                "mesh_change": rep.mesh_change,
+                "old_mesh": rep.old_mesh,
+                "new_mesh": rep.new_mesh,
+            }
+            on_mesh = not on_mesh
+    finally:
+        mgr.close()
+    return out
+
+
+def _geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def _gate(cells, strategies, tol):
+    """The --smoke fatal conditions; returns a list of failure rows."""
+    fails = []
+    for strat, row in strategies.items():
+        if not row["mesh_change"] or row["new_mesh"] is None \
+                and row["old_mesh"] is None:
+            fails.append(f"{strat}: mesh-changing repartition did not "
+                         f"record a mesh transition ({row})")
+    agree = _geomean([c["model_agreement_frac"] for c in cells.values()])
+    if agree < tol:
+        fails.append(f"per-mesh latency model disagrees with measured "
+                     f"cells: geomean agreement {agree:.3f} < {tol}")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode with fatal transition/model gates")
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
+                                                  "BENCH_shard.json"))
+    args = ap.parse_args()
+
+    if args.smoke:
+        names = ["dense"]
+        mesh_shapes = [None, (2,), (4,)]
+        splits, reps = [1, 2], 8
+    else:
+        names = list(CONFIGS)
+        mesh_shapes = [None, (2,), (4,), (8,), (2, 4)]
+        splits, reps = [1, 2, 4], 24
+
+    cells = {}
+    for name in names:
+        cells.update(bench_config(name, mesh_shapes=mesh_shapes,
+                                  splits=splits, reps=reps))
+    strategies = bench_strategies(mesh=(2,), reps=reps)
+
+    results = {
+        "bench": "shard_micro",
+        "smoke": bool(args.smoke),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "cells": cells,
+        "strategies": strategies,
+        "summary": {
+            "model_agreement_frac": round(_geomean(
+                [c["model_agreement_frac"] for c in cells.values()]), 3),
+            "reshard_ms_mean": round(float(np.mean(
+                [s["t_reshard_ms"] for s in strategies.values()])), 3),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(json.dumps(results, indent=2))
+    print(f"# wrote {args.out}")
+
+    if args.smoke:
+        tol = float(os.environ.get("SHARD_TOL", "0.25"))
+        fails = _gate(cells, strategies, tol)
+        for row in fails:
+            print(f"# SHARD GATE FAIL {row}", file=sys.stderr)
+        if fails:
+            return 1
+        print(f"# shard_micro: gates OK (model tol {tol})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,7 +2,10 @@
 # Tiered CI driver.
 #
 #   ./ci.sh [--tier1] [extra pytest args]   fast gate (default):
-#       the whole pytest suite, fail-fast, suite-wide per-test timeout.
+#       the whole pytest suite, fail-fast, suite-wide per-test timeout,
+#       then tests/test_sharding.py again in its own process under an
+#       8-fake-device CPU backend (the XLA flag must not leak into the
+#       main suite's numerics, see tests/test_sharding.py).
 #       This is the ROADMAP's tier-1 verify and what every push runs.
 #
 #   ./ci.sh --tier2 [extra pytest args]     scheduled scenario gate:
@@ -28,12 +31,19 @@
 #       (fatal: the kernel/rolled serving decode path must hold
 #       tokens/s vs the reference path and its cold range-build wall
 #       must stay within tol of the committed baseline; refreshes
-#       BENCH_decode.json), the switch-path microbenchmark (refreshes
+#       BENCH_decode.json), the sharded-cloud-stage microbenchmark in
+#       --smoke mode under an 8-fake-device CPU backend (fatal: every
+#       registered strategy must complete a mesh-shape-changing
+#       repartition with the resharding wall recorded on its report,
+#       and the per-mesh latency model must agree with the measured
+#       {mesh x split} cells; refreshes BENCH_shard.json), the
+#       switch-path microbenchmark (refreshes
 #       BENCH_switch.json; non-fatal: perf noise must not mask a green
 #       suite) and the perf-regression check against the committed
 #       baselines (BENCH_baseline.json + BENCH_handoff_baseline.json +
-#       BENCH_chaos_baseline.json + BENCH_decode_baseline.json; warns
-#       by default, BENCH_STRICT=1 turns regressions fatal).
+#       BENCH_chaos_baseline.json + BENCH_decode_baseline.json +
+#       BENCH_shard_baseline.json; warns by default, BENCH_STRICT=1
+#       turns regressions fatal).
 #
 # Back-compat: SKIP_BENCH=1 forces tier-1 regardless of flags.
 set -euo pipefail
@@ -63,6 +73,14 @@ fi
 
 run_py -m pytest -x -q "$@"
 
+# sharding tests, second pass in a dedicated 8-fake-device process: the
+# device-count flag must land before jax initialises and must NOT leak
+# into the main suite (it perturbs XLA CPU numerics enough to break the
+# bit-exact split-invariance tests), so the multi-device cases skip above
+# and run for real here
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    run_py -m pytest -x -q tests/test_sharding.py
+
 if [[ "$TIER" == "2" ]]; then
     run_py -m repro.serving --smoke
     run_py -m benchmarks.scenario_matrix --smoke
@@ -86,6 +104,14 @@ if [[ "$TIER" == "2" ]]; then
     # refreshes BENCH_decode.json (same staleness rule as above)
     rm -f BENCH_decode.json
     run_py benchmarks/decode_micro.py --smoke
+    # sharded cloud stage (fatal): mesh-changing repartitions must
+    # complete under every strategy with the resharding wall recorded,
+    # and the per-mesh latency model must track the measured cells; the
+    # benchmark forces its own 8-fake-device backend, the explicit env
+    # here just makes the CI contract visible
+    rm -f BENCH_shard.json
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        run_py benchmarks/shard_micro.py --smoke
     # same staleness rule for the (non-fatal) switch microbenchmark
     rm -f BENCH_switch.json
     run_py benchmarks/switch_micro.py --smoke \

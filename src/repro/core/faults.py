@@ -32,6 +32,7 @@ injector classes under a name, resolve instances from spec strings.
 from __future__ import annotations
 
 import threading
+import warnings
 import zlib
 from dataclasses import replace as _dc_replace
 from typing import Any, ClassVar, Dict, List, Optional, Sequence, Tuple
@@ -46,6 +47,20 @@ from repro.core.strategies import Registry
 class InjectedBuildFailure(RuntimeError):
     """A pipeline build failed (or was abandoned) because a FaultPlan
     said so — distinguishable from organic build errors in tests."""
+
+
+def _canon_key(key: Any) -> Any:
+    """One identity per build no matter how the caller spells the key:
+    the pool passes ``PipelineKey``, fault specs and older tests still
+    pass legacy ``(split, owns_weights)`` tuples.  Counters and keyed
+    draws must agree across both spellings."""
+    from repro.core.pool import PipelineKey
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return PipelineKey.of(key)
+    except (TypeError, ValueError):    # not a pool key at all: use as-is
+        return key
 
 
 def _keyed_uniform(seed: int, *parts: Any) -> float:
@@ -352,6 +367,7 @@ class FaultPlan:
             return list(self._events)
 
     def build_attempts(self, key: Any) -> int:
+        key = _canon_key(key)
         with self._lock:
             return self._build_counts.get(key, 0)
 
@@ -359,6 +375,7 @@ class FaultPlan:
     def on_build(self, key: Any) -> None:
         if not self.armed:
             return
+        key = _canon_key(key)
         with self._lock:
             attempt = self._build_counts.get(key, 0) + 1
             self._build_counts[key] = attempt

@@ -31,21 +31,29 @@ class SplitDecision:
         return self.t_edge + self.t_transfer + self.t_cloud
 
 
-def latency_curve(profile: ModelProfile, net: NetworkModel
+def latency_curve(profile: ModelProfile, net: NetworkModel,
+                  mesh_shape: Optional[Tuple[int, ...]] = None
                   ) -> List[SplitDecision]:
     out = []
     for s in range(profile.num_splits()):
-        te, tt, tc = profile.latency(s, net)
+        te, tt, tc = profile.latency(s, net, mesh_shape=mesh_shape)
         out.append(SplitDecision(s, te, tt, tc))
     return out
 
 
 def optimal_split(profile: ModelProfile, net: NetworkModel,
                   edge_mem_budget: Optional[int] = None,
-                  unit_mem_bytes: Optional[List[int]] = None) -> SplitDecision:
-    """argmin_{split} T_e + T_t + T_c, optionally memory-feasible on the edge."""
+                  unit_mem_bytes: Optional[List[int]] = None,
+                  *, mesh_shape: Optional[Tuple[int, ...]] = None
+                  ) -> SplitDecision:
+    """argmin_{split} T_e + T_t + T_c, optionally memory-feasible on the edge.
+
+    ``mesh_shape`` prices the CLOUD term with the per-mesh latency model
+    (``ModelProfile.mesh_cloud_time``) so the optimum can move when the
+    cloud stage is tensor-parallel: sharding shrinks T_c, which pushes the
+    best split EARLIER (ship more layers to the now-faster cloud)."""
     best = None
-    for cand in latency_curve(profile, net):
+    for cand in latency_curve(profile, net, mesh_shape):
         if edge_mem_budget is not None and unit_mem_bytes is not None:
             if sum(unit_mem_bytes[:cand.split + 1]) > edge_mem_budget:
                 continue
@@ -58,15 +66,16 @@ def optimal_split(profile: ModelProfile, net: NetworkModel,
 
 def should_repartition(profile: ModelProfile, current_split: int,
                        net: NetworkModel, min_gain: float = 0.0,
-                       *, best: Optional[SplitDecision] = None
+                       *, best: Optional[SplitDecision] = None,
+                       mesh_shape: Optional[Tuple[int, ...]] = None
                        ) -> Tuple[bool, SplitDecision]:
     """The paper repartitions whenever the optimum moved; ``min_gain`` > 0 is
     the beyond-paper hysteresis knob (relative latency gain required).
     Pass ``best`` to reuse an already-computed optimum."""
     if best is None:
-        best = optimal_split(profile, net)
+        best = optimal_split(profile, net, mesh_shape=mesh_shape)
     if best.split == current_split:
         return False, best
-    cur = profile.total_latency(current_split, net)
+    cur = profile.total_latency(current_split, net, mesh_shape=mesh_shape)
     gain = (cur - best.total) / cur if cur > 0 else 0.0
     return gain > min_gain, best

@@ -61,28 +61,45 @@ class BuildReport:
     t_weights: float = 0.0        # weight placement / reload
     t_compile_edge: float = 0.0
     t_compile_cloud: float = 0.0
+    t_reshard: float = 0.0        # cloud-weight placement onto the mesh
     t_wall: float = 0.0           # end-to-end build wall time; less than
                                   # ``total`` when the stages overlapped
 
     @property
     def total(self) -> float:
-        return self.t_weights + self.t_compile_edge + self.t_compile_cloud
+        return (self.t_weights + self.t_compile_edge + self.t_compile_cloud
+                + self.t_reshard)
 
 
 class EdgeCloudPipeline:
-    """One edge-cloud pipeline at a fixed split point."""
+    """One edge-cloud pipeline at a fixed split point.
+
+    ``mesh_shape`` makes the CLOUD stage tensor-parallel: the cloud
+    executable compiles against a ``jax.sharding.Mesh`` of that shape
+    (``repro.launch.mesh.make_cloud_mesh``) with parameter shardings from
+    ``repro.distributed.sharding.param_shardings`` and a mesh-resident
+    weight copy placed at build time.  The edge stage stays single-device
+    — the edge box has one accelerator; only the cloud gains devices.
+    """
 
     def __init__(self, runner: StageRunner, split: int, net: NetworkModel,
                  *, edge_scale: float = CLOUD_SPEC.flops / EDGE_SPEC.flops,
-                 owns_weights: bool = False):
+                 owns_weights: bool = False,
+                 mesh_shape: Optional[tuple] = None):
         self.runner = runner
         self.split = split
         self.net = net
         self.edge_scale = edge_scale     # edge is this much slower than host
         self.owns_weights = owns_weights  # True => separate weight buffers (2x mem)
+        self.mesh_shape = tuple(mesh_shape) if mesh_shape else None
         self.edge_fn: Optional[Callable] = None
         self.cloud_fn: Optional[Callable] = None
         self.params = runner.params
+        # the cloud stage's weight view: ``params`` when single-device, a
+        # mesh-resident sharded copy when ``mesh_shape`` is set
+        self.cloud_params = runner.params
+        self._cloud_psh = None           # param shardings (mesh builds)
+        self._cloud_in_shardings = None  # boundary-activation shardings
         # build-time input avals per stage; None = retracing jit path
         self._edge_avals = None
         self._cloud_avals = None
@@ -141,9 +158,27 @@ class EdgeCloudPipeline:
             th.start()
         sw_cloud = Stopwatch()
         mid_avals = r.stage_out_avals(lo_e, hi_e, self.params, in_avals)
-        cloud_fn = r.stage_executable(lo_c, hi_c, self.params, mid_avals,
-                                      fresh=cold)
-        rep.t_compile_cloud = sw_cloud.elapsed()
+        if self.mesh_shape is None:
+            self.cloud_params = self.params
+            self._cloud_psh = self._cloud_in_shardings = None
+            cloud_fn = r.stage_executable(lo_c, hi_c, self.params, mid_avals,
+                                          fresh=cold)
+        else:
+            from repro.launch.mesh import make_cloud_mesh
+            mesh = make_cloud_mesh(self.mesh_shape)
+            psh, ssh = r.stage_shardings(mesh, mid_avals)
+            self._cloud_psh, self._cloud_in_shardings = psh, ssh
+            cloud_fn = r.stage_executable(lo_c, hi_c, self.params, mid_avals,
+                                          fresh=cold, shardings=(psh, ssh),
+                                          mesh=mesh)
+            # the cloud container's weight copy lives ON the mesh; placing
+            # it here (at build time) is what lets prebuilt standbys pay
+            # the reshard off the stream
+            sw = Stopwatch()
+            self.cloud_params = jax.device_put(self.params, psh)
+            jax.block_until_ready(self.cloud_params)
+            rep.t_reshard = sw.elapsed()
+        rep.t_compile_cloud = sw_cloud.elapsed() - rep.t_reshard
         if th is not None:
             th.join()
         else:
@@ -155,6 +190,28 @@ class EdgeCloudPipeline:
         self._cloud_avals = aval_fingerprint(mid_avals)
         rep.t_wall = rep.t_weights + sw_wall.elapsed()
         return rep
+
+    def reshard(self) -> int:
+        """Place any weight buffers not already on this pipeline's mesh.
+
+        Called by ``PipelinePool.activate`` when a switch changes the
+        cloud mesh shape; returns the logical bytes actually moved.  A
+        pipeline built normally already placed its copy (``BuildReport.
+        t_reshard``), so the on-stream cost is ~0 for prebuilt standbys —
+        only an entry whose placement was dropped (or a subclass's live
+        decode state) moves bytes here.
+        """
+        if not self.ready or self._cloud_psh is None:
+            return 0
+        leaves = jax.tree.leaves(self.cloud_params)
+        shards = jax.tree.leaves(self._cloud_psh)
+        if all(getattr(a, "sharding", None) == s
+               for a, s in zip(leaves, shards)):
+            return 0
+        moved = sum(a.size * a.dtype.itemsize for a in leaves)
+        self.cloud_params = jax.device_put(self.cloud_params, self._cloud_psh)
+        jax.block_until_ready(self.cloud_params)
+        return moved
 
     def warm(self, sample_inputs) -> RequestTiming:
         """One throwaway forward — the "always-running" warm-up.
@@ -176,6 +233,9 @@ class EdgeCloudPipeline:
         self.edge_fn = None
         self.cloud_fn = None
         self.params = None
+        self.cloud_params = None
+        self._cloud_psh = None
+        self._cloud_in_shardings = None
         # a closed pipeline must surface its error, not retrace
         self._edge_avals = None
         self._cloud_avals = None
@@ -199,8 +259,12 @@ class EdgeCloudPipeline:
             return self.edge_fn(self.params, inputs)
 
     def _run_cloud(self, h):
+        if self._cloud_in_shardings is not None:
+            # the edge->cloud transfer: the boundary activation lands on
+            # the cloud mesh (AOT executables do not auto-reshard inputs)
+            h = jax.device_put(h, self._cloud_in_shardings)
         try:
-            return self.cloud_fn(self.params, h)
+            return self.cloud_fn(self.cloud_params, h)
         except TypeError:
             if self._cloud_avals is None \
                     or aval_fingerprint(h) == self._cloud_avals:
@@ -208,7 +272,7 @@ class EdgeCloudPipeline:
             self._cloud_avals = None
             self.cloud_fn = self.runner.stage_fn(self.split + 1,
                                                  self.runner.num_units)
-            return self.cloud_fn(self.params, h)
+            return self.cloud_fn(self.cloud_params, h)
 
     def process(self, inputs, *, batch: int = 1, seq: Optional[int] = None
                 ) -> tuple[Any, RequestTiming]:
@@ -231,5 +295,11 @@ class EdgeCloudPipeline:
     def live_param_bytes(self) -> int:
         if not self.ready:
             return 0
-        return sum(a.size * a.dtype.itemsize
-                   for a in jax.tree.leaves(self.params))
+        n = sum(a.size * a.dtype.itemsize
+                for a in jax.tree.leaves(self.params))
+        if self.cloud_params is not None and self.cloud_params is not self.params:
+            # mesh builds hold a second, sharded weight copy (logical size;
+            # per-device it is 1/tp of this)
+            n += sum(a.size * a.dtype.itemsize
+                     for a in jax.tree.leaves(self.cloud_params))
+        return n

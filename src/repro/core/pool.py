@@ -1,7 +1,8 @@
 """PipelinePool: the shared substrate all switching strategies operate on.
 
-The pool owns every built ``EdgeCloudPipeline``, keyed by
-``(split, owns_weights)``:
+The pool owns every built ``EdgeCloudPipeline``, keyed by a frozen
+``PipelineKey`` (``split``, ``mesh_shape``, ``owns_weights``, with room
+for a model ``variant`` per ROADMAP item 3):
 
 * ``owns_weights=False`` entries share the runner's weight buffers (the
   paper's "same container" / Case-2 configurations, 1x memory) and reuse
@@ -60,7 +61,56 @@ from repro.core.network import NetworkModel
 from repro.core.pipeline import BuildReport, EdgeCloudPipeline
 from repro.core.stages import StageRunner
 
-PoolKey = Tuple[int, bool]            # (split, owns_weights)
+# sentinel: "caller did not say" — distinct from an explicit mesh_shape=None
+# (an explicitly unsharded cloud stage)
+_UNSET = object()
+
+
+@dataclass(frozen=True)
+class PipelineKey:
+    """First-class pool key: which pipeline *configuration* an entry holds.
+
+    ``split`` is the edge/cloud partition point; ``mesh_shape`` is the
+    cloud-stage device mesh (None = single-device cloud executable);
+    ``owns_weights`` distinguishes the paper's Case-1 second-weight-copy
+    standbys from shared-weight entries; ``variant`` is reserved for
+    model-variant switching (quantized/distilled edge stages, ROADMAP
+    item 3) so adding it later is not another key migration.
+
+    Replaces the ad-hoc ``(split, owns_weights)`` tuples that used to be
+    threaded through the pool, the strategies and the ``BuildExecutor``.
+    Legacy tuples are still accepted everywhere a key is taken, via
+    :meth:`of`, with a ``DeprecationWarning`` — for one release.
+    """
+    split: int
+    owns_weights: bool = False
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    variant: str = ""
+
+    def __post_init__(self):
+        if self.mesh_shape is not None:
+            object.__setattr__(self, "mesh_shape",
+                               tuple(int(d) for d in self.mesh_shape))
+
+    @classmethod
+    def of(cls, key) -> "PipelineKey":
+        """Normalize a key: PipelineKey passes through, a legacy
+        ``(split, owns_weights)`` tuple is shimmed with a warning."""
+        if isinstance(key, cls):
+            return key
+        if isinstance(key, tuple) and len(key) == 2 \
+                and not isinstance(key[0], tuple):
+            warnings.warn(
+                "(split, owns_weights) tuple pool keys are deprecated; "
+                "construct a repro.core.pool.PipelineKey instead",
+                DeprecationWarning, stacklevel=3)
+            return cls(split=int(key[0]), owns_weights=bool(key[1]))
+        raise TypeError(f"not a pool key: {key!r}")
+
+
+# Deprecated alias: the pre-PipelineKey name.  Kept so existing
+# ``from repro.core.pool import PoolKey`` imports keep type-checking.
+PoolKey = PipelineKey
 
 
 class SwitchAborted(RuntimeError):
@@ -73,8 +123,24 @@ class SwitchAbortedWarning(UserWarning):
 
 
 @dataclass
+class ReshardReport:
+    """One mesh-shape transition executed at activation time.
+
+    ``t_wall`` is measured ON THE STREAM (inside ``activate``, under the
+    same lock the pointer swap takes) — it is downtime, and the switch
+    owner folds it into ``SwitchReport.t_reshard``.  ``moved_bytes`` is
+    the logical size of the buffers that actually changed placement
+    (0 for a prebuilt standby whose weights were placed at build time —
+    the overlapped strategies' whole point)."""
+    old_mesh: Optional[Tuple[int, ...]]
+    new_mesh: Optional[Tuple[int, ...]]
+    t_wall: float = 0.0
+    moved_bytes: int = 0
+
+
+@dataclass
 class PoolEntry:
-    key: PoolKey
+    key: PipelineKey
     pipeline: EdgeCloudPipeline
     report: Optional[BuildReport]
     last_used: int = 0
@@ -85,11 +151,15 @@ class PoolEntry:
 
     @property
     def split(self) -> int:
-        return self.key[0]
+        return self.key.split
 
     @property
     def owns_weights(self) -> bool:
-        return self.key[1]
+        return self.key.owns_weights
+
+    @property
+    def mesh_shape(self) -> Optional[Tuple[int, ...]]:
+        return self.key.mesh_shape
 
     @property
     def charged_bytes(self) -> int:
@@ -100,7 +170,8 @@ class PoolEntry:
 @guarded_by("_lock", "_entries", "_pending", "_build_failures",
             "_standby_handle", "_executor", "_clock",
             "_aborted_switch_threads", "_pause_epoch",
-            "active_key", "standby_key", rank=RANK_POOL)
+            "active_key", "standby_key", "_paused_key", "mesh_shape",
+            "last_reshard", "reshards", rank=RANK_POOL)
 class PipelinePool:
     """Owns N built pipelines plus the checkpoint Pause-and-Resume reloads."""
 
@@ -111,7 +182,8 @@ class PipelinePool:
                  warm_standbys: bool = False,
                  max_entries: int = 16,
                  executor: Optional[BuildExecutor] = None,
-                 fault_plan=None):
+                 fault_plan=None,
+                 mesh_shape: Optional[Tuple[int, ...]] = None):
         self.runner = runner
         # chaos valve (repro.core.faults.FaultPlan or None): consulted
         # before every pipeline build; unguarded — armed/swap is a
@@ -128,18 +200,27 @@ class PipelinePool:
         # default off to keep unit-test pools cheap)
         self.warm_standbys = warm_standbys
         self.max_entries = max_entries
-        self._entries: Dict[PoolKey, PoolEntry] = {}
+        # the cloud-mesh shape NEW builds target (None = single-device).
+        # A mesh-shape-changing repartition is: set_mesh_shape(new), then
+        # run any registered strategy — its builds key on the new shape
+        # and activation reshards weights + decode state on the stream.
+        self.mesh_shape = (tuple(int(d) for d in mesh_shape)
+                           if mesh_shape is not None else None)
+        self._entries: Dict[PipelineKey, PoolEntry] = {}
         self._clock = 0
-        self.active_key: Optional[PoolKey] = None
-        self.standby_key: Optional[PoolKey] = None
+        self.active_key: Optional[PipelineKey] = None
+        self.standby_key: Optional[PipelineKey] = None
+        self._paused_key: Optional[PipelineKey] = None
         self._checkpoint_path = checkpoint_path
         self._lock = make_lock("pool", RANK_POOL)
         self._executor = executor
-        self._pending: Dict[PoolKey, BuildHandle] = {}
+        self._pending: Dict[PipelineKey, BuildHandle] = {}
         self._standby_handle: Optional[BuildHandle] = None
-        self._build_failures: List[Tuple[PoolKey, BaseException]] = []
+        self._build_failures: List[Tuple[PipelineKey, BaseException]] = []
         self._aborted_switch_threads: Set[threading.Thread] = set()
         self._pause_epoch = 0       # bumped by every pause(): "went dark"
+        self.last_reshard: Optional[ReshardReport] = None
+        self.reshards: List[ReshardReport] = []
 
     @property
     def checkpoint_path(self) -> str:
@@ -161,8 +242,41 @@ class PipelinePool:
                 self._executor = BuildExecutor()
             return self._executor
 
+    # -- keys --------------------------------------------------------------
+    def make_key(self, split: int, *, owns_weights: bool = False,
+                 mesh_shape=_UNSET, variant: str = "") -> PipelineKey:
+        """The key a build for ``split`` targets *right now*: unless the
+        caller pins one, ``mesh_shape`` defaults to the pool's current
+        target mesh — which is how every strategy becomes mesh-aware
+        without knowing meshes exist."""
+        if mesh_shape is _UNSET:
+            with self._lock:
+                mesh_shape = self.mesh_shape
+        return PipelineKey(split=int(split), owns_weights=bool(owns_weights),
+                           mesh_shape=mesh_shape, variant=variant)
+
+    def _coerce_key(self, key, owns_weights: bool = False,
+                    mesh_shape=_UNSET) -> PipelineKey:
+        """Accept a PipelineKey, a legacy tuple (deprecation shim) or a
+        bare split int (+ the keyword flags) uniformly."""
+        if isinstance(key, PipelineKey):
+            return key
+        if isinstance(key, tuple):
+            return PipelineKey.of(key)
+        return self.make_key(int(key), owns_weights=owns_weights,
+                             mesh_shape=mesh_shape)
+
+    def set_mesh_shape(self, mesh_shape: Optional[Tuple[int, ...]]) -> None:
+        """Retarget NEW builds to a different cloud mesh (device gained or
+        lost).  Existing entries keep their shapes; the next repartition's
+        activation performs the measured reshard."""
+        with self._lock:
+            self.mesh_shape = (tuple(int(d) for d in mesh_shape)
+                               if mesh_shape is not None else None)
+
     # -- bookkeeping -------------------------------------------------------
-    def __contains__(self, key: PoolKey) -> bool:
+    def __contains__(self, key) -> bool:
+        key = self._coerce_key(key)
         with self._lock:
             return key in self._entries
 
@@ -170,16 +284,18 @@ class PipelinePool:
         with self._lock:
             return len(self._entries)
 
-    def keys(self) -> Iterator[PoolKey]:
+    def keys(self) -> Iterator[PipelineKey]:
         with self._lock:
             return iter(list(self._entries))
 
-    def has(self, split: int, owns_weights: bool = False) -> bool:
+    def has(self, key, owns_weights: bool = False) -> bool:
+        key = self._coerce_key(key, owns_weights)
         with self._lock:
-            e = self._entries.get((split, owns_weights))
+            e = self._entries.get(key)
             return e is not None and e.pipeline.ready
 
-    def get(self, key: PoolKey) -> Optional[PoolEntry]:
+    def get(self, key) -> Optional[PoolEntry]:
+        key = self._coerce_key(key)
         with self._lock:
             return self._entries.get(key)
 
@@ -241,17 +357,19 @@ class PipelinePool:
                 e.pipeline.net = net
 
     # -- build / reuse -----------------------------------------------------
-    def _new_pipeline(self, split: int, owns_weights: bool
-                      ) -> EdgeCloudPipeline:
+    def _new_pipeline(self, key: PipelineKey) -> EdgeCloudPipeline:
         """Pipeline construction hook (stateful pools build
         ``StatefulEdgeCloudPipeline``s against their shared session)."""
-        return EdgeCloudPipeline(self.runner, split, self.net,
-                                 owns_weights=owns_weights)
+        return EdgeCloudPipeline(self.runner, key.split, self.net,
+                                 owns_weights=key.owns_weights,
+                                 mesh_shape=key.mesh_shape)
 
-    def ensure(self, split: int, *, owns_weights: bool = False,
+    def ensure(self, key, *, owns_weights: bool = False,
                cold: bool = False, reload_from: Optional[str] = None,
                reuse: bool = True) -> Tuple[PoolEntry, bool]:
-        """Return a ready pipeline for ``(split, owns_weights)``.
+        """Return a ready pipeline for a ``PipelineKey`` (or a bare split
+        int + ``owns_weights``, which keys against the pool's current
+        target mesh).
 
         ``reuse=True`` returns a cached entry when present (warm hit,
         zero build cost — what ``switch_pool`` exploits); ``reuse=False``
@@ -261,7 +379,7 @@ class PipelinePool:
         Safe to call from the build worker: the (long) compile runs
         outside the pool lock; only the entry insertion is serialized.
         """
-        key = (split, owns_weights)
+        key = self._coerce_key(key, owns_weights)
         if reuse:
             with self._lock:
                 cached = self._entries.get(key)
@@ -273,7 +391,7 @@ class PipelinePool:
             # chaos valve: may raise InjectedBuildFailure or stall.
             # Outside the pool lock, like the build it gates.
             plan.on_build(key)
-        pipe = self._new_pipeline(split, owns_weights)
+        pipe = self._new_pipeline(key)
         report = pipe.build(self.sample_inputs, cold=cold,
                             reload_from=reload_from)
         with self._lock:
@@ -304,7 +422,8 @@ class PipelinePool:
         """(Re)build the Scenario-A standby; returns wall-clock build time."""
         ow = self.resolve_standby_ownership(owns_weights)
         sw = timing.Stopwatch()
-        entry, _ = self.ensure(split, owns_weights=ow, cold=ow, reuse=False)
+        entry, _ = self.ensure(self.make_key(split, owns_weights=ow),
+                               cold=ow, reuse=False)
         with self._lock:
             # arm the standby BEFORE warming: eviction treats the standby
             # as the last resort, so a concurrently-landing build's budget
@@ -315,13 +434,14 @@ class PipelinePool:
         return sw.elapsed()
 
     # -- background builds -------------------------------------------------
-    def pending(self, split: int, owns_weights: bool = False
+    def pending(self, key, owns_weights: bool = False
                 ) -> Optional[BuildHandle]:
         """The in-flight build handle for a key, if any."""
+        key = self._coerce_key(key, owns_weights)
         with self._lock:
-            return self._pending.get((split, owns_weights))
+            return self._pending.get(key)
 
-    def submit_build(self, split: int, *, owns_weights: bool = False,
+    def submit_build(self, key, *, owns_weights: bool = False,
                      cold: bool = False, reuse: bool = True,
                      standby: bool = False, enforce_budget: bool = False,
                      on_done: Optional[Callable[[BuildHandle], None]] = None
@@ -338,7 +458,7 @@ class PipelinePool:
         after the build lands, which is the speculative builders'
         best-effort contract.
         """
-        key = (split, owns_weights)
+        key = self._coerce_key(key, owns_weights)
         with self._lock:
             existing = self._pending.get(key)
             if existing is not None:
@@ -363,8 +483,7 @@ class PipelinePool:
                         # become the active key between submit and run —
                         # e.g. a mismatch switch activating the standby.)
                         return self._entries[key]
-                entry, hit = self.ensure(split, owns_weights=owns_weights,
-                                         cold=cold, reuse=reuse)
+                entry, hit = self.ensure(key, cold=cold, reuse=reuse)
                 if standby and self.warm_standbys and not hit:
                     # "always-running" standby: absorb the first-execution
                     # spike on the worker, not on the first post-swap
@@ -397,17 +516,18 @@ class PipelinePool:
                 handle.add_done_callback(on_done)
         return handle
 
-    def wait(self, split: int, owns_weights: bool = False,
+    def wait(self, key, owns_weights: bool = False,
              timeout: Optional[float] = None) -> Optional[PoolEntry]:
         """Block until any in-flight build for the key lands; surface
         failures; return the entry (None if the build failed/was evicted)."""
+        key = self._coerce_key(key, owns_weights)
         with self._lock:
-            handle = self._pending.get((split, owns_weights))
+            handle = self._pending.get(key)
         if handle is not None:
             handle.wait(timeout)
         self._surface_failures()
         with self._lock:
-            return self._entries.get((split, owns_weights))
+            return self._entries.get(key)
 
     def wait_standby(self, timeout: Optional[float] = None
                      ) -> Optional[EdgeCloudPipeline]:
@@ -463,40 +583,76 @@ class PipelinePool:
                           BackgroundBuildFailed)
 
     # -- activation / teardown ---------------------------------------------
-    def activate(self, key: PoolKey) -> float:
+    def activate(self, key) -> float:
         """Atomic pointer swap to an already-built pipeline; returns t_switch.
 
         Atomic w.r.t. in-flight admission: the swap happens under the same
         lock ``snapshot_active`` reads under, so the serving engine either
         admits against the old pipeline (and drains on it) or against the
-        new one — never a torn state."""
+        new one — never a torn state.
+
+        When the incoming entry's ``mesh_shape`` differs from the outgoing
+        active's (a repartition that also gained/lost cloud devices), the
+        mesh transition is executed here — ``pipeline.reshard()`` places
+        any weights not already on the target mesh — measured on the
+        stream and recorded as ``last_reshard`` for the switch owner to
+        stamp onto its ``SwitchReport``.  Stateful pools additionally
+        reshard the live decode state in their override."""
+        key = self._coerce_key(key)
         with self._lock:
             self._check_fence()
             entry = self._entries[key]
             assert entry.pipeline.ready, f"pipeline {key} not built"
+            old_key = self.active_key if self.active_key is not None \
+                else self._paused_key
             sw = timing.Stopwatch()
+            reshard = None
+            if old_key is not None and old_key.mesh_shape != key.mesh_shape:
+                rsw = timing.Stopwatch()
+                moved = entry.pipeline.reshard()
+                reshard = ReshardReport(old_mesh=old_key.mesh_shape,
+                                        new_mesh=key.mesh_shape,
+                                        t_wall=rsw.elapsed(),
+                                        moved_bytes=moved)
             self.active_key = key
+            self._paused_key = None
             t_switch = sw.elapsed()
             if self.standby_key == key:
                 self.standby_key = None
+            if reshard is not None:
+                self.last_reshard = reshard
+                self.reshards.append(reshard)
             self._touch(entry)
         return t_switch
 
-    def try_activate(self, key: PoolKey) -> Optional[float]:
+    def take_last_reshard(self) -> Optional[ReshardReport]:
+        """Pop the reshard executed by the most recent activation (None if
+        the last switch kept the mesh shape) — same single-consumer
+        contract as the stateful pool's ``take_last_handoff``."""
+        with self._lock:
+            reshard, self.last_reshard = self.last_reshard, None
+            return reshard
+
+    def try_activate(self, key) -> Optional[float]:
         """``activate`` that returns None instead of raising when the key
         vanished (a concurrently-landing build's eviction can reap a
         non-active entry between a caller's readiness check and the swap)."""
+        key = self._coerce_key(key)
         with self._lock:
             entry = self._entries.get(key)
             if entry is None or not entry.pipeline.ready:
                 return None
             return self.activate(key)
 
-    def pause(self) -> Optional[PoolKey]:
+    def pause(self) -> Optional[PipelineKey]:
         """Stop serving (Pause-and-Resume step ii); returns the old key."""
         with self._lock:
             self._check_fence()
             old, self.active_key = self.active_key, None
+            # remember what WAS serving so the resume-side activation can
+            # still detect a mesh-shape change across the dark window
+            if old is not None:
+                self._paused_key = old
             self._pause_epoch += 1
         return old
 
@@ -539,7 +695,8 @@ class PipelinePool:
             raise SwitchAborted("this switch was abandoned by the watchdog; "
                                 "its pool mutations are fenced off")
 
-    def release(self, key: PoolKey) -> None:
+    def release(self, key) -> None:
+        key = self._coerce_key(key)
         with self._lock:
             if key == self.active_key:
                 raise ValueError("cannot release the active pipeline")

@@ -13,7 +13,7 @@ cited methods:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, CNNConfig
 from repro.core.timing import Stopwatch
-from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, DeviceSpec
+from repro.core.hardware import CLOUD_SPEC, EDGE_SPEC, ICI_LINK_BW, DeviceSpec
 from repro.core.network import NetworkModel
 
 
@@ -47,6 +47,12 @@ class ModelProfile:
     # bumped by invalidate_cache(); downstream memos (e.g. switch_pool's
     # optimal_split cache) key on (profile, version, len(units))
     _version: int = field(default=0, init=False, repr=False, compare=False)
+    # per-mesh latency model: mesh_shape -> (alpha, beta) scales on the
+    # analytic terms (see ``mesh_cloud_time``); absent shape = (1.0, 1.0),
+    # i.e. the uncalibrated roofline-style default.  Filled by
+    # ``calibrate_mesh`` from measured sharded-cloud walls.
+    mesh_models: Dict[Tuple[int, ...], Tuple[float, float]] = \
+        field(default_factory=dict, repr=False, compare=False)
 
     def num_splits(self) -> int:
         return len(self.units) - 1  # split after unit i, i in [0, n-2]
@@ -62,7 +68,8 @@ class ModelProfile:
             return cached
         pe = np.cumsum([u.t_edge for u in self.units])
         pc = np.cumsum([u.t_cloud for u in self.units])
-        self._psum = (n, pe, pc)
+        pb = np.cumsum([u.boundary_bytes for u in self.units])
+        self._psum = (n, pe, pc, pb)
         return self._psum
 
     def invalidate_cache(self) -> None:
@@ -71,16 +78,60 @@ class ModelProfile:
         self._psum = None
         self._version += 1
 
-    def latency(self, split: int, net: NetworkModel):
-        """(T_e, T_t, T_c) for a split after unit `split` (Eq. 1)."""
-        n, pe, pc = self._prefix()
+    @staticmethod
+    def mesh_tp(mesh_shape) -> int:
+        """Tensor-parallel degree of a cloud mesh shape (last axis; a
+        leading data axis cannot help a batch-of-1 serving stream)."""
+        return int(mesh_shape[-1]) if mesh_shape else 1
+
+    def mesh_model(self, mesh_shape) -> Tuple[float, float]:
+        """Calibration scales ``(alpha, beta)`` for a mesh shape: alpha
+        multiplies the 1/tp compute term, beta the ring-collective term."""
+        if mesh_shape is None:
+            return (1.0, 1.0)
+        return self.mesh_models.get(tuple(mesh_shape), (1.0, 1.0))
+
+    def mesh_cloud_time(self, t_cloud: float, coll_bytes: float,
+                        mesh_shape) -> float:
+        """Per-mesh cloud-stage time — the per-unit cost as a function of
+        mesh shape.  The uncalibrated default is the roofline 3-term
+        shape restricted to what tensor parallelism changes:
+
+            t = alpha * t_cloud / tp                       (compute, 1/tp)
+              + beta * 2(tp-1)/tp * coll_bytes / link_bw   (ring all-reduce)
+
+        with the same ``ICI_LINK_BW`` constant ``repro.distributed.
+        roofline`` prices collectives with — which is exactly what makes
+        the model checkable against measured ``Roofline`` terms.
+        ``coll_bytes`` is the summed per-unit activation volume of the
+        cloud range (each TP layer all-reduces its residual-stream
+        partials).
+        """
+        tp = self.mesh_tp(mesh_shape)
+        if tp <= 1:
+            return t_cloud
+        alpha, beta = self.mesh_model(mesh_shape)
+        t_coll = 2.0 * (tp - 1) / tp * float(coll_bytes) / ICI_LINK_BW
+        return alpha * t_cloud / tp + beta * t_coll
+
+    def latency(self, split: int, net: NetworkModel, mesh_shape=None):
+        """(T_e, T_t, T_c) for a split after unit `split` (Eq. 1).
+
+        ``mesh_shape`` prices the CLOUD side on a tensor-parallel mesh of
+        that shape via the per-mesh latency model (``mesh_cloud_time``).
+        """
+        n, pe, pc, pb = self._prefix()
         t_e = float(pe[split])
         t_c = float(pc[n - 1] - pc[split])
+        if mesh_shape is not None:
+            coll = float(pb[n - 1] - pb[split])
+            t_c = self.mesh_cloud_time(t_c, coll, mesh_shape)
         t_t = net.transfer_time(self.units[split].boundary_bytes)
         return t_e, t_t, t_c
 
-    def total_latency(self, split: int, net: NetworkModel) -> float:
-        return sum(self.latency(split, net))
+    def total_latency(self, split: int, net: NetworkModel,
+                      mesh_shape=None) -> float:
+        return sum(self.latency(split, net, mesh_shape))
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +268,7 @@ def calibrate_decode(profile: ModelProfile, timings: Sequence, *,
         return float(np.median(np.asarray(xs, np.float64)))
     t_edge = med([t.t_edge for t in timings])
     t_cloud = med([t.t_cloud for t in timings])
-    n, pe, pc = profile._prefix()
+    n, pe, pc, _ = profile._prefix()
     pred_e = float(pe[split])
     pred_c = float(pc[n - 1] - pc[split])
     scale_e = t_edge / pred_e if pred_e > 0 and t_edge > 0 else 1.0
@@ -227,3 +278,34 @@ def calibrate_decode(profile: ModelProfile, timings: Sequence, *,
         u.t_cloud *= scale_c
     profile.invalidate_cache()
     return scale_e, scale_c
+
+
+def calibrate_mesh(profile: ModelProfile, timings: Sequence, *, split: int,
+                   mesh_shape) -> Tuple[float, float]:
+    """Fit the per-mesh latency model to MEASURED sharded-cloud walls.
+
+    The mirror of ``calibrate_decode`` for the mesh axis: ``timings`` are
+    measured stage walls (objects with a ``t_cloud`` attribute) from a
+    pipeline whose cloud stage ran on a mesh of ``mesh_shape`` at the
+    given ``split``.  One measurement point fits one scale: alpha and
+    beta move together by measured/predicted, preserving the analytic
+    compute/collective ratio (two mesh shapes would over-determine a
+    single (alpha, beta) pair; per-shape entries keep each shape's fit
+    independent).  Stores the scales on ``profile.mesh_models`` and
+    bumps the cache version so memoized ``optimal_split`` results drop.
+    """
+    if mesh_shape is None or ModelProfile.mesh_tp(mesh_shape) <= 1:
+        return (1.0, 1.0)
+    mesh_shape = tuple(int(d) for d in mesh_shape)
+    t_cloud = float(np.median(np.asarray([t.t_cloud for t in timings],
+                                         np.float64)))
+    n, pe, pc, pb = profile._prefix()
+    base_c = float(pc[n - 1] - pc[split])
+    coll = float(pb[n - 1] - pb[split])
+    # predict with the CURRENT scales, then apply the correction ratio
+    pred = profile.mesh_cloud_time(base_c, coll, mesh_shape)
+    scale = t_cloud / pred if pred > 0 and t_cloud > 0 else 1.0
+    alpha, beta = profile.mesh_model(mesh_shape)
+    profile.mesh_models[mesh_shape] = (alpha * scale, beta * scale)
+    profile.invalidate_cache()
+    return profile.mesh_models[mesh_shape]

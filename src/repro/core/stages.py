@@ -99,7 +99,7 @@ class _CompiledStageCache:
         return out
 
     def stage_executable(self, lo: int, hi: int, params, state, *,
-                         fresh: bool = False):
+                         fresh: bool = False, shardings=None, mesh=None):
         """AOT-compiled executable for units [lo, hi), specialized to the
         avals of ``(params, state)``.
 
@@ -108,20 +108,54 @@ class _CompiledStageCache:
         retraces and recompiles and leaves no trace in the cache ("new
         container").  Compilation happens via ``lower().compile()`` against
         abstract avals: no sample ever executes.
+
+        ``shardings`` (a ``(param_shardings, state_shardings)`` pair from
+        ``stage_shardings``) + ``mesh`` compile the stage SPMD over the
+        device mesh — the sharded cloud stage.  The mesh identity enters
+        the cache key so sharded and single-device executables for the
+        same range never collide; tracing runs under the activation-
+        sharding policy (``repro.distributed.policy``) so GSPMD gets the
+        same constraints the production dry-run proves out.
         """
         in_avals = abstractify(state)
-        key = (lo, hi) + aval_fingerprint(in_avals)
+        mesh_key = None if mesh is None else \
+            (tuple(mesh.axis_names), tuple(mesh.devices.shape))
+        key = (lo, hi, mesh_key) + aval_fingerprint(in_avals)
         if not fresh:
             with self._cache_lock:
                 hit = self._aot_cache.get(key)
             if hit is not None:
                 return hit
-        compiled = jax.jit(self._make_fn(lo, hi)).lower(
-            params, in_avals).compile()
+        compiled = self._compile_stage(lo, hi, params, in_avals,
+                                       shardings=shardings, mesh=mesh)
         if not fresh:
             with self._cache_lock:
                 self._aot_cache[key] = compiled
         return compiled
+
+    def _compile_stage(self, lo: int, hi: int, params, in_avals, *,
+                       shardings=None, mesh=None):
+        if mesh is None or shardings is None:
+            return jax.jit(self._make_fn(lo, hi)).lower(
+                params, in_avals).compile()
+        from repro.distributed import policy as pol
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        tp_size = sizes.get("model", 1)
+        dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+        dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+        dp_size = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+        attn = "heads"
+        if getattr(self.cfg, "num_kv_heads", None):
+            attn = pol.choose_attn_mode(self.cfg, tp_size, kind="prefill")
+        # process-global policy state: benign for concurrent unsharded
+        # traces (their bare-P constraints have no mesh and are dropped),
+        # and sharded builds are serialized by the pool's single worker
+        with mesh, \
+                pol.policy(dp=dp, tp="model", attn=attn, tp_size=tp_size,
+                           dp_size=dp_size, active=True):
+            return jax.jit(self._make_fn(lo, hi),
+                           in_shardings=shardings).lower(
+                params, in_avals).compile()
 
 
 class StageRunner(_CompiledStageCache):
@@ -207,6 +241,26 @@ class StageRunner(_CompiledStageCache):
             runner = StageRunner(self.cfg, params, self.attn_impl)
             return runner.run_units(state, lo, hi)
         return fn
+
+    # -- sharded (tensor-parallel) cloud stage -------------------------
+    def stage_shardings(self, mesh, state):
+        """``(param_shardings, state_shardings)`` for compiling a stage
+        over ``mesh``.
+
+        Parameters follow ``repro.distributed.sharding.param_shardings``
+        (heads / d_ff / experts / vocab -> the "model" axis).  The
+        boundary activation is REPLICATED: the edge ships one hidden
+        state to the cloud and every tensor-parallel shard consumes it
+        whole — batch sharding would need dp >= batch, which serving's
+        batch-of-1 streams never have.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import param_shardings
+        psh = param_shardings(self.cfg, mesh, abstractify(self.params),
+                              shard_fsdp=False)
+        replicated = NamedSharding(mesh, P())
+        ssh = jax.tree.map(lambda _: replicated, abstractify(state))
+        return psh, ssh
 
     def boundary_bytes(self, split: int, batch: int, seq: int,
                        act_bytes: int = 4) -> int:

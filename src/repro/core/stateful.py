@@ -766,24 +766,38 @@ class StatefulStageRunner:
 
     # -- compiled executables -------------------------------------------
     def executable(self, mode: str, u0: int, u1: int, params, *args,
-                   fresh: bool = False):
+                   fresh: bool = False, shardings=None, mesh=None):
         """AOT executable for a unit range, specialized to the arg avals.
 
         ``mode``: ``decode`` (params, x, cache, pos), ``full`` (params, x),
-        ``embed`` (params, tokens), ``head`` (params, x)."""
+        ``embed`` (params, tokens), ``head`` (params, x).
+
+        ``mesh`` + ``shardings`` compile a tensor-parallel executable:
+        ``shardings`` is the jit ``in_shardings`` tuple over
+        ``(params, *args)`` (prefix pytrees allowed) and the cache keys on
+        the mesh identity, so single-device and per-mesh executables for
+        the same range coexist."""
         makers = {"decode": lambda: self._make_decode_fn(u0, u1),
                   "full": lambda: self._make_full_fn(u0, u1),
                   "embed": self._make_embed_fn,
                   "head": self._make_head_fn}
         avals = abstractify(args)
-        key = (mode, u0, u1) + aval_fingerprint(avals)
+        mesh_key = None if mesh is None else (tuple(mesh.axis_names),
+                                              tuple(mesh.devices.shape))
+        key = (mode, u0, u1, mesh_key) + aval_fingerprint(avals)
         if not fresh:
             with self._lock:
                 hit = self._aot_cache.get(key)
             if hit is not None:
                 return hit
-        compiled = jax.jit(makers[mode]()).lower(
-            abstractify(params), *avals).compile()
+        if mesh is None:
+            compiled = jax.jit(makers[mode]()).lower(
+                abstractify(params), *avals).compile()
+        else:
+            with mesh:
+                compiled = jax.jit(makers[mode](),
+                                   in_shardings=shardings).lower(
+                    abstractify(params), *avals).compile()
         if not fresh:
             with self._lock:
                 self._aot_cache[key] = compiled
@@ -1056,6 +1070,12 @@ class DecodeSession:
         with self._lock:
             self.cache.update(caches)
 
+    def replace_state(self, entries: Dict[str, Any]) -> None:
+        """Swap state buffers wholesale — the mesh-reshard path, where the
+        values are numerically identical and only device placement moved."""
+        with self._lock:
+            self.cache.update(entries)
+
     # -- test/benchmark support ------------------------------------------
     def snapshot(self) -> dict:
         with self._lock:
@@ -1088,14 +1108,24 @@ class StatefulEdgeCloudPipeline:
     def __init__(self, runner: StatefulStageRunner, split: int,
                  net: NetworkModel, *, session: DecodeSession,
                  edge_scale: float = CLOUD_SPEC.flops / EDGE_SPEC.flops,
-                 owns_weights: bool = False):
+                 owns_weights: bool = False,
+                 mesh_shape: Optional[tuple] = None):
         self.runner = runner
         self.session = session
         self.split = min(max(int(split), 0), runner.num_units)
         self.net = net
         self.edge_scale = edge_scale
         self.owns_weights = owns_weights
+        self.mesh_shape = tuple(mesh_shape) if mesh_shape else None
         self.params = runner.params
+        # cloud-stage weight view: ``params`` single-device, a sharded
+        # mesh-resident copy when ``mesh_shape`` is set (mirrors
+        # ``EdgeCloudPipeline``; the edge stage always stays single-device)
+        self.cloud_params = runner.params
+        self._cloud_psh = None              # param shardings (mesh builds)
+        self._cloud_state_shardings = None  # cloud-range decode state
+        self._repl = None                   # replicated sharding on the mesh
+        self._edge_sharding = None          # where edge-stage operands live
         self._u_edge = unit_index_of_split(runner.cfg, self.split)
         self._u_all = len(runner.units)
         self.embed_fn = None
@@ -1123,6 +1153,9 @@ class StatefulEdgeCloudPipeline:
         else:
             self.params = r.params
 
+        self._edge_sharding = getattr(
+            jax.tree.leaves(self.params)[0], "sharding", None)
+
         s = self.session
         B, D = s.batch, r.cfg.d_model
         x_av = jax.ShapeDtypeStruct((B, 1, D), jnp.float32)
@@ -1138,12 +1171,45 @@ class StatefulEdgeCloudPipeline:
             "decode", 0, self._u_edge, self.params, x_av,
             s.subset(0, self._u_edge), pos_av, fresh=cold)
         rep.t_compile_edge = sw.restart()
-        self.cloud_fn = r.executable(
-            "decode", self._u_edge, self._u_all, self.params, x_av,
-            s.subset(self._u_edge, self._u_all), pos_av, fresh=cold)
-        self.head_fn = r.executable("head", 0, 0, self.params, x_av,
-                                    fresh=cold)
-        rep.t_compile_cloud = sw.elapsed()
+        cache_cloud = s.subset(self._u_edge, self._u_all)
+        if self.mesh_shape is None:
+            self.cloud_params = self.params
+            self._cloud_psh = self._cloud_state_shardings = self._repl = None
+            self.cloud_fn = r.executable(
+                "decode", self._u_edge, self._u_all, self.params, x_av,
+                cache_cloud, pos_av, fresh=cold)
+            self.head_fn = r.executable("head", 0, 0, self.params, x_av,
+                                        fresh=cold)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.distributed.sharding import (decode_state_shardings,
+                                                    param_shardings)
+            from repro.launch.mesh import make_cloud_mesh
+            mesh = make_cloud_mesh(self.mesh_shape)
+            psh = param_shardings(r.cfg, mesh, abstractify(self.params),
+                                  shard_fsdp=False)
+            csh = decode_state_shardings(r.cfg, mesh,
+                                         abstractify(cache_cloud))
+            repl = NamedSharding(mesh, PartitionSpec())
+            self._cloud_psh, self._cloud_state_shardings = psh, csh
+            self._repl = repl
+            self.cloud_fn = r.executable(
+                "decode", self._u_edge, self._u_all, self.params, x_av,
+                cache_cloud, pos_av, fresh=cold,
+                shardings=(psh, repl, csh, repl), mesh=mesh)
+            self.head_fn = r.executable("head", 0, 0, self.params, x_av,
+                                        fresh=cold, shardings=(psh, repl),
+                                        mesh=mesh)
+            rep.t_compile_cloud = sw.elapsed()
+            # place the cloud weight copy + the live cloud-range decode
+            # state on the mesh at build time, so a prebuilt standby's
+            # on-stream reshard is ~0
+            swr = Stopwatch()
+            self.cloud_params = jax.device_put(self.params, psh)
+            jax.block_until_ready(self.cloud_params)
+            rep.t_reshard = swr.elapsed()
+        if rep.t_compile_cloud == 0.0:
+            rep.t_compile_cloud = sw.elapsed() - rep.t_reshard
         rep.t_wall = rep.t_weights + sw_wall.elapsed()
         return rep
 
@@ -1154,11 +1220,60 @@ class StatefulEdgeCloudPipeline:
     def close(self) -> None:
         self.embed_fn = self.edge_fn = self.cloud_fn = self.head_fn = None
         self.params = None
+        self.cloud_params = None
+        self._cloud_psh = self._cloud_state_shardings = self._repl = None
+        self._edge_sharding = None
+
+    def reshard(self) -> int:
+        """Place cloud weights AND the live cloud-range decode state onto
+        this pipeline's placement (``PipelinePool.activate``'s
+        mesh-transition hook); returns logical bytes actually moved.
+        Weights were placed at build, so for a prebuilt standby only the
+        decode state — which kept advancing on the old placement — moves
+        here.  An unsharded pipeline taking over from a mesh build pulls
+        the state back to its single device the same way."""
+        if not self.ready:
+            return 0
+        moved = 0
+
+        def place(tree, shardings):
+            nonlocal moved
+            leaves = jax.tree.leaves(tree)
+            shards = jax.tree.leaves(shardings)
+            if len(shards) == 1 and len(leaves) > 1:
+                shards = shards * len(leaves)   # one sharding, whole tree
+            if all(getattr(a, "sharding", None) == sh
+                   for a, sh in zip(leaves, shards)):
+                return tree, False
+            moved += sum(np.prod(np.shape(a)) * np.dtype(a.dtype).itemsize
+                         for a in leaves)
+            placed = jax.device_put(tree, shardings)
+            jax.block_until_ready(placed)
+            return placed, True
+
+        if self._cloud_psh is not None:
+            self.cloud_params, _ = place(self.cloud_params, self._cloud_psh)
+        state_sh = self._cloud_state_shardings
+        if state_sh is None:
+            state_sh = self._edge_sharding     # mesh -> single device
+        s = self.session
+        if hasattr(s, "replace_state") and state_sh is not None:
+            cache = s.subset(self._u_edge, self._u_all)
+            placed, changed = place(cache, state_sh)
+            if changed:
+                s.replace_state(placed)
+        return int(moved)
 
     # -- serve -----------------------------------------------------------
     def _step(self, token, cache_edge, cache_cloud, pos):
         """One decode step through both stages; returns everything the
         session needs to commit, plus the measured stage timing."""
+        edge_sh = self._edge_sharding
+        if edge_sh is not None and \
+                getattr(token, "sharding", None) != edge_sh:
+            # the previous step's logits (hence this argmax token) may be
+            # mesh-resident; the edge embed is compiled single-device
+            token = jax.device_put(token, edge_sh)
         sw = Stopwatch()
         x = self.embed_fn(self.params, token)
         xe, new_e, b_e = self.edge_fn(self.params, x, cache_edge, pos)
@@ -1167,11 +1282,39 @@ class StatefulEdgeCloudPipeline:
         t_transfer = self.net.transfer_time(
             int(np.prod(xe.shape)) * xe.dtype.itemsize)
         sw = Stopwatch()
-        xc, new_c, b_c = self.cloud_fn(self.params, xe, cache_cloud, pos)
-        logits = self.head_fn(self.params, xc)
+        if self._cloud_state_shardings is not None:
+            # the edge->cloud hop: AOT executables do not auto-reshard, so
+            # the boundary token, position and any state entry not already
+            # on the mesh (e.g. right after a recompute hand-off) are
+            # placed explicitly — a no-op for already-placed steady state
+            xe = jax.device_put(xe, self._repl)
+            pos = jax.device_put(pos, self._repl)
+            cache_cloud = jax.device_put(cache_cloud,
+                                         self._cloud_state_shardings)
+        elif edge_sh is not None and any(
+                getattr(a, "sharding", None) != edge_sh
+                for a in jax.tree.leaves(cache_cloud)):
+            # single-device stage fed state left on a mesh (warm/serve
+            # racing ahead of activation's reshard): pull it back
+            cache_cloud = jax.device_put(cache_cloud, edge_sh)
+            pos = jax.device_put(pos, edge_sh)
+        xc, new_c, b_c = self.cloud_fn(self.cloud_params, xe, cache_cloud,
+                                       pos)
+        if self._repl is not None:
+            # head is compiled for a replicated input; the decode stage's
+            # output sharding is whatever GSPMD propagated
+            xc = jax.device_put(xc, self._repl)
+        logits = self.head_fn(self.cloud_params, xc)
         jax.block_until_ready(logits)
         t_cloud = sw.elapsed()
-        bounds = jnp.concatenate([b_e, b_c], axis=0)
+        if self._repl is not None:
+            # mesh-resident and edge-resident bounds cannot mix in one
+            # jnp.concatenate (device mismatch); the session stores numpy
+            # anyway
+            bounds = np.concatenate([np.asarray(b_e), np.asarray(b_c)],
+                                    axis=0)
+        else:
+            bounds = jnp.concatenate([b_e, b_c], axis=0)
         return logits, {**new_e, **new_c}, bounds, \
             RequestTiming(t_edge, t_transfer, t_cloud)
 
@@ -1211,8 +1354,15 @@ class StatefulEdgeCloudPipeline:
     def live_param_bytes(self) -> int:
         if not self.ready:
             return 0
-        return sum(a.size * a.dtype.itemsize
-                   for a in jax.tree.leaves(self.params))
+        n = sum(a.size * a.dtype.itemsize
+                for a in jax.tree.leaves(self.params))
+        if self.cloud_params is not None \
+                and self.cloud_params is not self.params:
+            # mesh builds hold a second, sharded weight copy (logical
+            # size; per-device it is 1/tp of this)
+            n += sum(a.size * a.dtype.itemsize
+                     for a in jax.tree.leaves(self.cloud_params))
+        return n
 
 
 # ---------------------------------------------------------------------------
@@ -1238,7 +1388,7 @@ class HandoffReport:
         return self.t_wall + self.t_network
 
 
-@guarded_by("_lock", "last_handoff", "handoffs", "_paused_split")
+@guarded_by("_lock", "last_handoff", "handoffs")
 class StatefulPipelinePool(PipelinePool):
     """PipelinePool over ``StatefulEdgeCloudPipeline``s.
 
@@ -1257,13 +1407,12 @@ class StatefulPipelinePool(PipelinePool):
         self.force_mode = force_mode
         self.last_handoff: Optional[HandoffReport] = None
         self.handoffs: List[HandoffReport] = []
-        self._paused_split: Optional[int] = None
 
-    def _new_pipeline(self, split: int, owns_weights: bool
-                      ) -> StatefulEdgeCloudPipeline:
-        return StatefulEdgeCloudPipeline(self.runner, split, self.net,
+    def _new_pipeline(self, key) -> StatefulEdgeCloudPipeline:
+        return StatefulEdgeCloudPipeline(self.runner, key.split, self.net,
                                          session=self.session,
-                                         owns_weights=owns_weights)
+                                         owns_weights=key.owns_weights,
+                                         mesh_shape=key.mesh_shape)
 
     # -- hand-off ---------------------------------------------------------
     def _execute_handoff(self, old_split: int, new_split: int
@@ -1311,21 +1460,20 @@ class StatefulPipelinePool(PipelinePool):
         return h
 
     # -- overridden lifecycle ---------------------------------------------
-    def pause(self):
-        with self._lock:
-            if self.active is not None:
-                self._paused_split = self.active.split
-            return super().pause()
-
     def activate(self, key) -> float:
         """Hand-off + pointer swap.  The returned ``t_switch`` INCLUDES
         the hand-off's measured wall, so every strategy's own downtime /
         t_blocked accounting sees it exactly once — the priced link
         seconds (virtual) are the only part left for
-        ``strategies.apply_handoff`` to add."""
+        ``strategies.apply_handoff`` to add.  (The base activation also
+        executes + measures the mesh reshard when the key's mesh shape
+        changed — ``StatefulEdgeCloudPipeline.reshard`` moves the live
+        decode state along with any unplaced weights.)"""
+        key = self._coerce_key(key)
         with self._lock:
-            old_split = self.active.split if self.active is not None \
-                else self._paused_split
+            old_key = self.active_key if self.active_key is not None \
+                else self._paused_key
+            old_split = old_key.split if old_key is not None else None
             entry = self._entries[key]
             handoff = None
             if old_split is not None and (
@@ -1337,7 +1485,6 @@ class StatefulPipelinePool(PipelinePool):
                                                 entry.pipeline.split)
             t_switch = super().activate(key)
             entry.state_epoch = self.session.epoch
-            self._paused_split = None
             if handoff is not None:
                 self.last_handoff = handoff
                 self.handoffs.append(handoff)

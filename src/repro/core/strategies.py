@@ -96,6 +96,17 @@ class SwitchReport:
     handoff_mode: str = ""        # 'transfer' | 'recompute' | 'none'
     aborted: bool = False         # watchdog timed the switch out and the
                                   # engine rolled back to the old pipeline
+    # mesh-shape-changing repartitions only: the weight/state resharding
+    # the activation executed on the stream.  Its wall is already inside
+    # ``t_switch`` (activate measures the swap + reshard as one span);
+    # recorded separately so benchmarks can attribute it
+    t_reshard: float = 0.0
+    old_mesh: Optional[Tuple[int, ...]] = None
+    new_mesh: Optional[Tuple[int, ...]] = None
+
+    @property
+    def mesh_change(self) -> bool:
+        return self.old_mesh != self.new_mesh
 
 
 class StandbySplitMismatch(UserWarning):
@@ -114,7 +125,19 @@ def apply_handoff(pool: "PipelinePool", report: SwitchReport):
     no on-thread timer can see — are added to ``report.downtime`` here.
     Called once per switch by the two switch owners
     (``PipelineManager.repartition`` and ``ServingEngine.execute_switch``);
-    popping the hand-off keeps the stamp idempotent."""
+    popping the hand-off keeps the stamp idempotent.
+
+    Also stamps the mesh reshard (``pool.take_last_reshard``) the same
+    way: its wall is already inside the strategy's ``t_switch`` (the
+    activation measured swap + reshard as one span), so nothing is added
+    to ``downtime`` — the fields only attribute the cost."""
+    take_reshard = getattr(pool, "take_last_reshard", None)
+    if take_reshard is not None:
+        reshard = take_reshard()
+        if reshard is not None:
+            report.t_reshard = reshard.t_wall
+            report.old_mesh = reshard.old_mesh
+            report.new_mesh = reshard.new_mesh
     take = getattr(pool, "take_last_handoff", None)
     if take is None:
         return None
@@ -548,20 +571,20 @@ class SwitchPoolStrategy(SwitchStrategy):
             # would flatten the linear-trend extrapolation
             if not self._bw_hist or self._bw_hist[-1] != bw:
                 self._bw_hist.append(bw)
-        key = (new_split, self.owns_weights)
+        key = pool.make_key(new_split, owns_weights=self.owns_weights)
         hit, t_build, detail, note = False, 0.0, None, ""
-        if pool.has(new_split, self.owns_weights):
+        if pool.has(key):
             # predicted: pointer swap (guarded — a concurrently-landing
             # build's eviction may reap the entry before the swap)
             t_switch = pool.try_activate(key)
             if t_switch is not None:
                 hit = True
                 downtime = t_switch
-        if not hit and pool.pending(new_split, self.owns_weights) is not None:
+        if not hit and pool.pending(key) is not None:
             # the speculative build for exactly this key is in flight:
             # await it instead of duplicating the work
             sw = timing.Stopwatch()
-            entry = pool.wait(new_split, self.owns_weights)
+            entry = pool.wait(key)
             t_build = sw.elapsed()
             if entry is not None:
                 t_switch = pool.try_activate(entry.key)
@@ -593,10 +616,15 @@ class SwitchPoolStrategy(SwitchStrategy):
         once each job completes (deterministically after ``pool.drain()``)."""
         want = self.predicted_splits(pool)
         for key in pool.keys():
-            split, owned = key
-            if owned and key != pool.active_key and key != pool.standby_key \
-                    and split not in want \
-                    and pool.pending(split, owned) is None:
+            # stale = not wanted anymore, or built for a mesh shape the
+            # pool no longer targets (a set_mesh_shape retarget obsoletes
+            # old-mesh speculation)
+            stale = key.split not in want \
+                or key != pool.make_key(key.split,
+                                        owns_weights=key.owns_weights)
+            if key.owns_weights and key != pool.active_key \
+                    and key != pool.standby_key and stale \
+                    and pool.pending(key) is None:
                 try:
                     pool.release(key)
                 except ValueError:    # became active/in-flight meanwhile

@@ -3,9 +3,9 @@
 The paper's repartitioning mechanisms live in ``repro.core.strategies``
 as self-contained ``SwitchStrategy`` classes resolved by name through a
 registry (``@register_strategy``), and every built pipeline is owned by
-the ``repro.core.pool.PipelinePool`` (keyed by ``(split, owns_weights)``,
-LRU-evicted under an edge-memory budget).  This module keeps the seed's
-entry point stable::
+the ``repro.core.pool.PipelinePool`` (keyed by a frozen ``PipelineKey``
+— split, owns_weights, cloud mesh shape — LRU-evicted under an
+edge-memory budget).  This module keeps the seed's entry point stable::
 
     mgr = PipelineManager(runner, split=1, net=NetworkModel(20.0),
                           sample_inputs=inputs, standby_split=2)
@@ -134,6 +134,12 @@ class PipelineManager:
 
     def set_network(self, net: NetworkModel):
         self.pool.set_network(net)
+
+    def set_mesh_shape(self, mesh_shape) -> None:
+        """Retarget new builds to a different cloud mesh; the next
+        ``repartition`` (any strategy) builds for it and its activation
+        reshards weights/state on the stream (``SwitchReport.t_reshard``)."""
+        self.pool.set_mesh_shape(mesh_shape)
 
     def pause_resume(self, new_split: int) -> SwitchReport:
         return self.repartition("pause_resume", new_split)

@@ -19,6 +19,7 @@ Rules are path-based over the params pytree, so they apply uniformly to all
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Optional
 
 import jax
@@ -26,6 +27,28 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape
+
+
+class ShardingDegraded(UserWarning):
+    """A leaf's intended sharding was degraded to replication because a
+    tensor dim does not divide its mesh axis (jit ARGUMENT shardings must
+    divide exactly).  The maths stays correct — the cost is per-device
+    memory and missing parallelism on those leaves.  Warned once per
+    ``param_shardings``/``decode_state_shardings`` call with every
+    degraded leaf listed, so an unshardable config is visible instead of
+    silently replicating."""
+
+
+def _warn_degraded(fn_name: str, mesh: Mesh, degraded) -> None:
+    if not degraded:
+        return
+    detail = ", ".join(f"{name}[dim {dim}]={size} !% {ax}={n}"
+                       for name, dim, size, ax, n in degraded[:8])
+    more = f" (+{len(degraded) - 8} more)" if len(degraded) > 8 else ""
+    warnings.warn(
+        f"{fn_name}: {len(degraded)} leaf dim(s) do not divide the "
+        f"{dict(zip(mesh.axis_names, mesh.devices.shape))} mesh and were "
+        f"replicated: {detail}{more}", ShardingDegraded, stacklevel=3)
 
 
 def mesh_axes(mesh: Mesh):
@@ -125,6 +148,8 @@ def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape, *,
             return int(np.prod([sizes[x] for x in a]))
         return sizes[a]
 
+    degraded = []
+
     def rule(path, leaf):
         name = _path_str(path)
         spec = _param_spec(name, leaf.ndim, fsdp=fsdp, tp=tp,
@@ -132,17 +157,20 @@ def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape, *,
                            ax_size=ax_size)
         # divisibility guard: jit ARGUMENT shardings must divide exactly
         # (uneven shardings are only legal for intermediates) — replicate
-        # any dim that does not divide its axis.
+        # any dim that does not divide its axis, and say so.
         fixed = []
         for dim, ax in enumerate(spec):
             n = ax_size(ax)
             if n > 1 and leaf.shape[dim] % n != 0:
+                degraded.append((name, dim, leaf.shape[dim], ax, n))
                 fixed.append(None)
             else:
                 fixed.append(ax)
         return NamedSharding(mesh, P(*fixed))
 
-    return jax.tree_util.tree_map_with_path(rule, params_shape)
+    out = jax.tree_util.tree_map_with_path(rule, params_shape)
+    _warn_degraded("param_shardings", mesh, degraded)
+    return out
 
 
 def should_shard_fsdp_serving(cfg: ArchConfig, mesh: Mesh,
@@ -235,3 +263,46 @@ def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_shape,
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def decode_state_shardings(cfg: ArchConfig, mesh: Mesh, state):
+    """Shardings for a LIVE serving state dict (``DecodeSession.cache``
+    subset), keyed ``k{i}``/``v{i}``/``ak{g}``/``av{g}`` (heads-major
+    (B, KH, S, hd) — the per-layer, no-leading-L layout, unlike
+    ``cache_shardings``' stacked init layout), ``conv{i}`` (B, K-1, C)
+    and ``ssm{i}`` (mamba1 (B, Di, N) / mamba2 (B, H, P, N)).
+
+    Tensor-parallel only: serving batch is 1, so the dp axis replicates.
+    Non-divisible dims degrade to replication with a ``ShardingDegraded``
+    warning (same guard as ``param_shardings``)."""
+    _, tp = mesh_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = sizes.get("model", 1)
+    degraded = []
+
+    def want(name: str, nd: int):
+        if name[0] in ("k", "v", "a") and nd == 4:   # (B, KH, S, hd)
+            return [(1, 3)]      # kv heads -> tp, else head_dim -> tp
+        if name.startswith("conv"):                  # (B, K-1, C)
+            return [(nd - 1,)]
+        if name.startswith("ssm"):                   # channels/heads dim
+            return [(1,)]
+        return []
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        spec = [None] * leaf.ndim
+        if tp is not None and tp_size > 1:
+            for dims in want(name, leaf.ndim):
+                hit = next((d for d in dims
+                            if leaf.shape[d] % tp_size == 0), None)
+                if hit is not None:
+                    spec[hit] = tp
+                else:
+                    degraded.append((name, dims[0], leaf.shape[dims[0]],
+                                     tp, tp_size))
+        return NamedSharding(mesh, P(*spec))
+
+    out = jax.tree_util.tree_map_with_path(rule, state)
+    _warn_degraded("decode_state_shardings", mesh, degraded)
+    return out

@@ -22,3 +22,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_cloud_mesh(shape):
+    """The serving CLOUD stage's mesh: last axis is tensor-parallel
+    ("model"), a leading axis (if any) is "data".
+
+    Works over whatever devices the process has — real accelerators in
+    production, CPU fake devices in CI (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; tests and
+    ``benchmarks/shard_micro.py`` arrange this).  Raises with an
+    actionable message when the host has fewer devices than the shape
+    needs, instead of letting ``jax.make_mesh`` fail obscurely.
+    """
+    shape = tuple(int(d) for d in shape)
+    if not shape or any(d < 1 for d in shape):
+        raise ValueError(f"bad mesh shape {shape!r}")
+    if len(shape) > 2:
+        raise ValueError(f"cloud mesh is at most (data, model); got {shape!r}")
+    need = 1
+    for d in shape:
+        need *= d
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"cloud mesh {shape} needs {need} devices, host has {have} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before importing jax for CPU fake devices)")
+    axes = ("model",) if len(shape) == 1 else ("data", "model")
+    return jax.make_mesh(shape, axes)

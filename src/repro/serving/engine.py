@@ -267,7 +267,9 @@ class ServingEngine:
             analytic_downtime=report.downtime,
             t_handoff=report.t_handoff,
             handoff_mode=report.handoff_mode,
-            aborted=report.aborted))
+            aborted=report.aborted,
+            t_reshard=report.t_reshard,
+            mesh_change=report.mesh_change))
         self.reports.append(report)
         return report
 

@@ -89,6 +89,11 @@ class SimPipeline:
     def live_param_bytes(self) -> int:
         return self.runner.edge_param_bytes(self.split) if self.ready else 0
 
+    def reshard(self) -> int:
+        """Analytic pipelines hold no device buffers — a mesh-shape
+        transition moves nothing (the pool still records the report)."""
+        return 0
+
     def close(self) -> None:
         self.ready = False
 
@@ -117,15 +122,15 @@ class SimPool(PipelinePool):
         # deployment-time builds are free and only mid-stream ones price
         self.sim_clock = None
 
-    def _new_pipeline(self, split: int, owns_weights: bool) -> SimPipeline:
-        return SimPipeline(self.runner, split, self.net,
-                           owns_weights=owns_weights)
+    def _new_pipeline(self, key) -> SimPipeline:
+        return SimPipeline(self.runner, key.split, self.net,
+                           owns_weights=key.owns_weights)
 
-    def ensure(self, split: int, *, owns_weights: bool = False,
+    def ensure(self, key, *, owns_weights: bool = False,
                cold: bool = False, reload_from: Optional[str] = None,
                reuse: bool = True):
         try:
-            entry, hit = super().ensure(split, owns_weights=owns_weights,
+            entry, hit = super().ensure(key, owns_weights=owns_weights,
                                         cold=cold, reload_from=reload_from,
                                         reuse=reuse)
         except BaseException:

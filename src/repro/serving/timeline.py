@@ -69,6 +69,10 @@ class SwitchWindow:
     handoff_mode: str = ""              # 'transfer' | 'recompute' | ''
     aborted: bool = False               # watchdog timed the switch out;
                                         # the engine rolled back
+    t_reshard: float = 0.0              # on-stream mesh-reshard seconds
+                                        # inside this window
+    mesh_change: bool = False           # the switch changed the cloud
+                                        # mesh shape
 
     @property
     def duration(self) -> float:

@@ -3,8 +3,15 @@ import signal
 import jax
 import pytest
 
-# Tests run on the single host CPU device (the 512-device fake backend is
-# ONLY for launch/dryrun.py, which must run in its own process).
+# The multi-device sharding tests are NOT given fake devices here: forcing
+# --xla_force_host_platform_device_count on the whole suite changes XLA
+# CPU numerics enough to break the bit-exact split-invariance assertions
+# in test_faults/test_sessions.  tests/test_sharding.py skips its
+# device-hungry cases unless the process was launched with the flag
+# (ci.sh runs it a second time that way).
+
+# Tests otherwise target the first CPU device; the 512-device fake backend
+# is ONLY for launch/dryrun.py, which must run in its own process.
 jax.config.update("jax_enable_x64", False)
 
 try:                                    # suite-wide test deadline
